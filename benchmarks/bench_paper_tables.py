@@ -1,0 +1,161 @@
+"""Benchmarks mirroring the paper's Table 1 + §6 experiments, CPU-host
+edition.  Wall-clock numbers are CPU proxies (the target is TPU v5e and
+cycle-exact MCU numbers do not transfer); the *relationships* the paper
+claims — error bounds, determinism, crossover structure, O(1) switch —
+are what each benchmark checks and reports.
+
+Emits ``name,us_per_call,derived`` CSV rows like every other bench.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _bench(fn, *args, warmup=3, iters=20, repeats=5):
+    """median of `repeats` timing blocks — single-core wall clock on a
+    shared host is noisy; medians keep the paper-table relations stable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) / iters * 1e6)
+    return sorted(times)[len(times) // 2]
+
+
+def bench_trig():
+    """Paper Table 1 rows sin/cos: CORDIC vs libm, plus max abs error
+    and bit-determinism (the TPU analogue of Determinism Score)."""
+    from repro.core.cordic import cordic_sincos, cordic_sincos_q16
+    from repro.core.qformat import Q16_16, to_fixed
+
+    theta = np.linspace(-math.pi, math.pi, 65536).astype(np.float32)
+    t_fast = _bench(lambda x: cordic_sincos(x)[0], theta)
+    t_std = _bench(lambda x: jnp.sin(x), theta)
+    s, _ = cordic_sincos(theta)
+    err = float(np.max(np.abs(np.asarray(s) - np.sin(theta))))
+
+    tq = to_fixed(theta, Q16_16)
+    s1, c1 = cordic_sincos_q16(tq)
+    s2, c2 = cordic_sincos_q16(tq)
+    det = float(np.mean(np.asarray(s1) == np.asarray(s2)))
+    rows = [
+        ("trig.cordic_sin_64k", t_fast, f"max_err={err:.2e}"),
+        ("trig.libm_sin_64k", t_std, f"speed_ratio={t_std / t_fast:.3f}"),
+        ("trig.determinism", 0.0, f"bitwise_det={det:.4f} (paper: 0.994 timing-det)"),
+    ]
+    return rows
+
+
+def bench_scalar_mul():
+    """Paper Table 1 row mul: Q16.16 vs f32 multiply on vectors, plus
+    the Eq. 6 error bound check."""
+    from repro.core.qformat import Q16_16, from_fixed, q_mul, to_fixed
+
+    rng = np.random.default_rng(42)
+    x = rng.uniform(-100, 100, (1 << 20,)).astype(np.float32)
+    y = rng.uniform(-100, 100, (1 << 20,)).astype(np.float32)
+    xq, yq = to_fixed(x, Q16_16), to_fixed(y, Q16_16)
+    t_q = _bench(lambda a, b: q_mul(a, b), xq, yq)
+    t_f = _bench(lambda a, b: a * b, jnp.asarray(x), jnp.asarray(y))
+    zq = q_mul(xq, yq)
+    err = np.max(
+        np.abs(np.asarray(zq, np.int64) / 65536.0
+               - (np.asarray(xq, np.int64) / 65536.0) * (np.asarray(yq, np.int64) / 65536.0))
+    )
+    return [
+        ("mul.q16_1M", t_q, f"max_err={err:.3e} (bound 2^-17={2**-17:.3e})"),
+        ("mul.f32_1M", t_f, f"note=paper 1.5x is MCU-specific; int8 MXU gives 2x on TPU"),
+    ]
+
+
+def bench_matmul_crossover():
+    """Paper §6.4 + §8.1 (the open question): sweep n and find where the
+    tiled Q-format kernel crosses naive float.  The paper predicted
+    n >= 64 on the MCU and never measured it; we resolve the analogue
+    here (CPU host, int8-dot fast path vs f32 matmul)."""
+    from repro.models.layers import dot_fast_int8
+
+    rng = np.random.default_rng(42)
+    rows = []
+    crossover = None
+    for n in (4, 8, 16, 32, 64, 128, 256, 512):
+        a = rng.uniform(-1, 1, (n, n)).astype(np.float32)
+        b = rng.uniform(-1, 1, (n, n)).astype(np.float32)
+        aj, bj = jnp.asarray(a), jnp.asarray(b)
+        t_q = _bench(jax.jit(dot_fast_int8), aj, bj)
+        t_f = _bench(jax.jit(jnp.matmul), aj, bj)
+        speedup = t_f / t_q
+        if crossover is None and speedup >= 1.0 and n >= 32:
+            crossover = n
+        rows.append((f"matmul.n{n}", t_q, f"float_us={t_f:.1f},speedup={speedup:.2f}"))
+    rows.append(
+        ("matmul.crossover", 0.0,
+         f"first_n_with_speedup>=1: {crossover} (paper predicted n>=64 on LX6, untested)")
+    )
+    return rows
+
+
+def bench_switch():
+    """Paper Table 1 row switch: two-phase barrier latency, steady state
+    (both executables warm), vs the paper's 8.09 us at 240 MHz."""
+    from repro.core.precision import MathEngine, Mode
+
+    eng = MathEngine(Mode.PRECISE)
+    eng.set_mode(Mode.FAST)
+    eng.set_mode(Mode.PRECISE)  # both contexts warm
+    lat = []
+    for _ in range(50):
+        lat.append(eng.set_mode(Mode.FAST))
+        lat.append(eng.set_mode(Mode.PRECISE))
+    med = sorted(lat)[len(lat) // 2]
+    return [
+        ("switch.two_phase_barrier", med, f"median_us={med:.2f} (paper: 8.09us @240MHz)"),
+        ("switch.count", 0.0, f"n={len(lat)},max_us={max(lat):.1f}"),
+    ]
+
+
+def bench_footprint():
+    """Paper §4.3.2: 88-byte static footprint decomposition."""
+    from repro.core.qformat import static_footprint_bytes
+
+    fp = static_footprint_bytes()
+    return [("footprint.static", 0.0,
+             f"dispatch={fp['dispatch_table_bytes']}B,cordic={fp['cordic_table_bytes']}B,"
+             f"total={fp['total_bytes']}B (paper: 24+64=88)")]
+
+
+def bench_deferred_error():
+    """Paper Eq. 18: error of deferred-shift vs per-element rounding."""
+    from repro.core.linalg import qmatmul_deferred, qmatmul_per_element
+    from repro.core.qformat import Q16_16, from_fixed, to_fixed
+
+    rng = np.random.default_rng(42)
+    K = 256
+    a = to_fixed(rng.uniform(-0.9, 0.9, (32, K)).astype(np.float32), Q16_16)
+    b = to_fixed(rng.uniform(-0.9, 0.9, (K, 32)).astype(np.float32), Q16_16)
+    want = (np.asarray(a, np.float64) / 65536) @ (np.asarray(b, np.float64) / 65536)
+    e_def = np.abs(np.asarray(from_fixed(qmatmul_deferred(a, b, tile_k=K))) - want).mean()
+    e_per = np.abs(np.asarray(from_fixed(qmatmul_per_element(a, b, rounding=False))) - want).mean()
+    return [("deferred.error_reduction", 0.0,
+             f"per_element={e_per:.3e},deferred={e_def:.3e},ratio={e_per / max(e_def, 1e-12):.1f}x")]
+
+
+ALL = [bench_trig, bench_scalar_mul, bench_matmul_crossover, bench_switch,
+       bench_footprint, bench_deferred_error]
+
+
+def run():
+    rows = []
+    for fn in ALL:
+        rows.extend(fn())
+    return rows

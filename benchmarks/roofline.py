@@ -1,0 +1,92 @@
+"""Roofline aggregation: read the dry-run JSON cells and emit the
+EXPERIMENTS.md tables (one row per arch x shape x mesh)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).parent / "results" / "dryrun"
+
+
+def load_cells(mesh="single", mode="precise", tag=None):
+    cells = {}
+    suffix = f"-{tag}" if tag else ""
+    for p in sorted(RESULTS.glob(f"*-{mesh}-{mode}{suffix}.json")):
+        rec = json.loads(p.read_text())
+        if tag is None and any(
+            p.name.endswith(f"-{t}.json") for t in ("fsdp", "nosp", "int8")
+        ):
+            continue
+        cells[(rec["arch"], rec["shape"])] = rec
+    return cells
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f}"
+
+
+def roofline_table(mesh="single", mode="precise", tag=None) -> str:
+    cells = load_cells(mesh, mode, tag)
+    hdr = (
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPs | useful ratio | roofline frac | HBM GiB/dev |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    rows = []
+    for (arch, shape), rec in sorted(cells.items()):
+        if rec["status"] == "skip":
+            rows.append(f"| {arch} | {shape} | — | — | — | SKIP | — | — | — | — |")
+            continue
+        r = rec["roofline"]
+        mem = rec["memory"]
+        hbm = (mem.get("temp_size_in_bytes") or 0) + (mem.get("argument_size_in_bytes") or 0)
+        rows.append(
+            f"| {arch} | {shape} | {r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+            f"{r['collective_s']:.4f} | {r['dominant'].replace('_s','')} | "
+            f"{r['model_flops']:.2e} | {r['useful_flop_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.3f} | {fmt_bytes(hbm)} |"
+        )
+    return hdr + "\n".join(rows)
+
+
+def dryrun_table(mesh="single", mode="precise") -> str:
+    cells = load_cells(mesh, mode)
+    hdr = (
+        "| arch | shape | status | compile s | args GiB/dev | temp GiB/dev | "
+        "collective bytes/dev | collective ops |\n|---|---|---|---|---|---|---|---|\n"
+    )
+    rows = []
+    for (arch, shape), rec in sorted(cells.items()):
+        if rec["status"] == "skip":
+            reason = rec["reason"].split("—")[-1].strip()[:60]
+            rows.append(f"| {arch} | {shape} | SKIP ({reason}) | — | — | — | — | — |")
+            continue
+        mem = rec["memory"]
+        h = rec["hlo_costs"]
+        rows.append(
+            f"| {arch} | {shape} | ok | {rec['compile_s']} | "
+            f"{fmt_bytes(mem.get('argument_size_in_bytes'))} | "
+            f"{fmt_bytes(mem.get('temp_size_in_bytes'))} | "
+            f"{h['total_collective_bytes']:.2e} | {h['total_collective_count']:.0f} |"
+        )
+    return hdr + "\n".join(rows)
+
+
+def run():
+    rows = []
+    for mesh in ("single", "multi"):
+        cells = load_cells(mesh)
+        ok = sum(1 for c in cells.values() if c["status"] == "ok")
+        skip = sum(1 for c in cells.values() if c["status"] == "skip")
+        rows.append((f"roofline.cells_{mesh}", 0.0, f"ok={ok},skip={skip},total={len(cells)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("## Dry-run (single pod)\n")
+    print(dryrun_table("single"))
+    print("\n## Roofline (single pod)\n")
+    print(roofline_table("single"))

@@ -1,0 +1,40 @@
+"""Benchmark harness entrypoint: one section per paper table/figure +
+the roofline cell summary.  Prints ``name,us_per_call,derived`` CSV.
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--section trig|mul|matmul|switch|roofline|all]
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+from benchmarks import bench_paper_tables, roofline  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all")
+    args = ap.parse_args()
+
+    sections = {
+        "trig": bench_paper_tables.bench_trig,
+        "mul": bench_paper_tables.bench_scalar_mul,
+        "matmul": bench_paper_tables.bench_matmul_crossover,
+        "switch": bench_paper_tables.bench_switch,
+        "footprint": bench_paper_tables.bench_footprint,
+        "deferred": bench_paper_tables.bench_deferred_error,
+        "roofline": roofline.run,
+    }
+    todo = sections.values() if args.section == "all" else [sections[args.section]]
+
+    print("name,us_per_call,derived")
+    for fn in todo:
+        for name, us, derived in fn():
+            print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

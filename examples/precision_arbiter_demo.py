@@ -1,0 +1,33 @@
+"""The dynamic precision arbiter in action: train FAST until numerics
+degrade (injected), fall back to PRECISE through the two-phase barrier,
+then promote back to FAST after a stable window — the paper's
+'explicit, safe, costless' mode choice made automatic.
+
+Run:  PYTHONPATH=src python examples/precision_arbiter_demo.py
+"""
+
+from repro.core.arbiter import ArbiterConfig, PrecisionArbiter
+from repro.core.precision import MathEngine, Mode
+
+
+def main():
+    arb = PrecisionArbiter(ArbiterConfig(spike_factor=4.0, stable_steps=6, cooldown_steps=2))
+    eng = MathEngine(Mode.FAST)
+
+    # healthy steps, then a gradient spike, then recovery
+    telemetry = [(s, 2.0 - 0.01 * s, 1.0) for s in range(10)]
+    telemetry += [(10, 1.9, 40.0)]                      # spike!
+    telemetry += [(s, 1.9 - 0.005 * s, 1.0) for s in range(11, 30)]
+
+    for step, loss, gnorm in telemetry:
+        rec = arb.observe(step, loss, gnorm)
+        if rec is not None:
+            us = eng.set_mode(rec)
+            reason = arb.decisions[-1][2]
+            print(f"step {step:3d}: -> {rec.value.upper():8s} ({reason})  barrier {us:.1f} us")
+    print(f"\ndecision log: {arb.decisions}")
+    print(f"engine mode at end: {eng.mode.value}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Batched serving example: prefill + lock-step decode with runtime
+precision switching between requests (paper §7.2's hybrid strategy:
+the engine picks the path per workload envelope).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import smoke
+from repro.core.precision import Mode
+from repro.models import init_params
+from repro.runtime.serve import BatchedServer, ServerConfig
+
+
+def main():
+    cfg = smoke("gemma2_2b")  # local/global alternating + softcaps
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    srv = BatchedServer(cfg, params, ServerConfig(max_batch=4, max_len=64, max_new=12))
+
+    prompts = [[1, 2, 3, 4], [9, 8, 7], [5, 5, 5, 5, 5], [2, 4, 6, 8, 10, 12]]
+    print("PRECISE generations:")
+    for i, seq in enumerate(srv.generate(prompts)):
+        print(f"  req{i}: {seq}")
+
+    us = srv.set_mode(Mode.FAST)
+    print(f"\nswitched to FAST (int8 W8A8) in {us:.0f} us (first switch compiles; later switches are O(1))")
+    print("FAST generations:")
+    for i, seq in enumerate(srv.generate(prompts)):
+        print(f"  req{i}: {seq}")
+    us = srv.set_mode(Mode.PRECISE)
+    us = srv.set_mode(Mode.FAST)
+    print(f"steady-state switch latency: {us:.1f} us (paper: 8.09 us on 240 MHz MCU)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Sharded, atomic, async, topology-independent checkpointing.
+
+* **Atomic**: writes go to ``step_N.tmp/`` and are renamed to
+  ``step_N/`` only after fsync — a crash mid-save never corrupts the
+  latest checkpoint (restore picks the newest *committed* step).
+* **Async**: ``save()`` snapshots device arrays to host (blocking only
+  on D2H) and hands serialization to a background thread — the paper's
+  Core-0/Core-1 split applied to I/O.
+* **Topology-independent**: leaves are stored as full logical arrays
+  (np.save per leaf) plus a JSON manifest; ``restore()`` re-shards onto
+  whatever mesh the new job runs — elastic scaling (grow/shrink the
+  pod) is a restore, not a special case.
+
+For 1000+-node scale the per-leaf files would be chunked per shard
+(each host writes its own slice); the manifest format already carries
+the pytree structure needed for that — see DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["Checkpointer"]
+
+
+def _flatten_with_names(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p)) for p in path
+        )
+        out.append((name, leaf))
+    return out
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.save_count = 0
+        self.last_save_s = 0.0
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, *, blocking: bool = False) -> None:
+        """Snapshot now, serialize in the background (unless blocking)."""
+        self.wait()  # one in-flight save at a time
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)  # D2H snapshot
+
+        def work():
+            t0 = time.time()
+            tmp = self.dir / f"step_{step}.tmp"
+            final = self.dir / f"step_{step}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            manifest = {"step": step, "leaves": []}
+            for name, leaf in _flatten_with_names(host_tree):
+                fname = name.replace("/", "__") + ".npy"
+                np.save(tmp / fname, leaf)
+                manifest["leaves"].append(
+                    {"name": name, "file": fname,
+                     "shape": list(np.shape(leaf)), "dtype": str(np.asarray(leaf).dtype)}
+                )
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            fd = os.open(tmp, os.O_RDONLY)
+            os.fsync(fd)
+            os.close(fd)
+            if final.exists():
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic commit
+            self.save_count += 1
+            self.last_save_s = time.time() - t0
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+                continue
+            out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self,
+        template: Any,
+        step: Optional[int] = None,
+        *,
+        shardings: Any = None,
+    ) -> Any:
+        """Restore into the structure of ``template``.
+
+        ``shardings`` (optional pytree of NamedSharding, e.g. for a NEW
+        mesh) re-shards each full logical array via jax.device_put —
+        this is the elastic-scaling path.
+        """
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = self.dir / f"step_{step}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        by_name = {leaf["name"]: leaf for leaf in manifest["leaves"]}
+
+        names = [n for n, _ in _flatten_with_names(template)]
+        leaves_t, treedef = jax.tree_util.tree_flatten(template)
+        shard_leaves = (
+            jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else [None] * len(leaves_t)
+        )
+        out = []
+        for name, tmpl, sh in zip(names, leaves_t, shard_leaves):
+            rec = by_name[name]
+            arr = np.load(d / rec["file"])
+            assert list(arr.shape) == list(np.shape(tmpl)), (name, arr.shape, np.shape(tmpl))
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jax.numpy.asarray(arr, dtype=tmpl.dtype if hasattr(tmpl, "dtype") else None))
+        return jax.tree_util.tree_unflatten(treedef, out)

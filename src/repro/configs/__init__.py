@@ -1,0 +1,52 @@
+"""Assigned architecture configs (``--arch <id>``) + the paper's own
+engine config.  Each module exposes ``CONFIG`` built from the exact
+public spec; ``get_config(name)`` resolves ids; ``smoke(name)`` returns
+the family-preserving reduced config for CPU smoke tests."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig, smoke_config
+
+ARCH_IDS = (
+    "granite_moe_3b_a800m",
+    "mixtral_8x22b",
+    "phi3_vision_4_2b",
+    "deepseek_7b",
+    "minicpm3_4b",
+    "command_r_35b",
+    "gemma2_2b",
+    "jamba_v01_52b",
+    "mamba2_1_3b",
+    "musicgen_large",
+)
+
+_ALIASES = {
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "phi-3-vision-4.2b": "phi3_vision_4_2b",
+    "deepseek-7b": "deepseek_7b",
+    "minicpm3-4b": "minicpm3_4b",
+    "command-r-35b": "command_r_35b",
+    "gemma2-2b": "gemma2_2b",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "musicgen-large": "musicgen_large",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    if mod_name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ALIASES)}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def smoke(name: str) -> ModelConfig:
+    return smoke_config(get_config(name))
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,55 @@
+"""The paper's primary contribution: a Dynamic Precision Math Engine.
+
+C1  Q-format fixed-point core          -> qformat.py
+C2  16-iteration CORDIC trigonometry   -> cordic.py
+C3  deferred-shift tiled matmul        -> linalg.py (+ kernels/qmatmul)
+C4  runtime precision switching        -> precision.py / barrier.py
+      + dynamic arbitration (beyond paper) -> arbiter.py
+Tensor-scale Q formats                 -> quantization.py
+"""
+
+from repro.core.arbiter import ArbiterConfig, PrecisionArbiter
+from repro.core.barrier import TwoPhaseBarrier, multihost_sync
+from repro.core.cordic import (
+    ATAN_TABLE_Q16,
+    CORDIC_K_INV_Q16,
+    cordic_rotate_q16,
+    cordic_sincos,
+    cordic_sincos_q16,
+    exact_rope_phase_q16,
+    rope_inv_freq_q64,
+    rope_tables_cordic,
+)
+from repro.core.linalg import (
+    derive_tile_size,
+    matmul_float,
+    qmatmul_deferred,
+    qmatmul_per_element,
+)
+from repro.core.precision import OP_SET, MathEngine, Mode, PrecisionContext
+from repro.core.qformat import (
+    Q0_7,
+    Q1_15,
+    Q8_8,
+    Q8_24,
+    Q16_16,
+    QFormat,
+    from_fixed,
+    q_add,
+    q_add_sat,
+    q_mul,
+    q_mul_sat,
+    q_sub,
+    q_sub_sat,
+    static_footprint_bytes,
+    to_fixed,
+)
+from repro.core.quantization import (
+    QTensor,
+    compress_with_feedback,
+    dequantize_pow2,
+    quantize_pow2,
+    quantize_q16,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

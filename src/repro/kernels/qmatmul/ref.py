@@ -1,0 +1,50 @@
+"""Pure NumPy-int64 oracle for the qmatmul Pallas kernel.
+
+Defines the *contract* the kernel must match bit-exactly on the integer
+paths (and exactly-up-to-f32 on the float epilogue): exact int32-safe
+accumulation of int8 products, ONE deferred power-of-two correction per
+output element (paper Eq. 18)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def qmatmul_ref(a_q, b_q, ea, eb, epilogue: str = "float"):
+    """a_q (M,K) int8, b_q (K,N) int8, ea scalar int, eb (N,) int."""
+    a = np.asarray(a_q, np.int64)
+    b = np.asarray(b_q, np.int64)
+    acc = a @ b  # exact in int64 (products <= 2**14, K <= 2**17)
+    assert np.all(np.abs(acc) < 2**31), "accumulation must fit int32"
+    e = int(ea) + np.asarray(eb, np.int64)[None, :]
+    if epilogue == "int32":
+        return acc.astype(np.int32)
+    if epilogue == "float":
+        return (acc.astype(np.float64) * np.exp2(e.astype(np.float64))).astype(np.float32)
+    if epilogue == "q16":
+        s = e + 16
+        out = np.where(
+            s >= 0,
+            acc << np.maximum(s, 0),
+            (acc + (1 << np.maximum(-s - 1, 0)) * (s < 0)) >> np.maximum(-s, 0),
+        )
+        return out.astype(np.int32)
+    raise ValueError(epilogue)
+
+
+def quantize_pow2_ref(x, bits: int = 8, axis=None):
+    """NumPy mirror of core.quantization.quantize_pow2."""
+    x = np.asarray(x, np.float32)
+    if axis is None:
+        amax = np.max(np.abs(x))
+        e = int(np.ceil(np.log2(max(amax, 1e-30)))) - (bits - 1) if amax > 0 else 0
+        e_arr = np.int32(e)
+    else:
+        red = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
+        amax = np.max(np.abs(x), axis=red, keepdims=True)
+        e_arr = np.where(
+            amax > 0, np.ceil(np.log2(np.maximum(amax, 1e-30))).astype(np.int32) - (bits - 1), 0
+        )
+    qmax = 2 ** (bits - 1) - 1
+    q = np.clip(np.round(x * np.exp2(-e_arr.astype(np.float64))), -qmax - 1, qmax)
+    return q.astype({8: np.int8, 16: np.int16}[bits]), e_arr

@@ -1,0 +1,255 @@
+"""Trip-count-aware HLO cost extraction.
+
+``HloCostAnalysis`` (what ``compiled.cost_analysis()`` wraps) counts
+every ``while`` body ONCE — useless for scan-heavy programs where >95%
+of the work sits inside layer/chunk loops.  XLA, however, stamps every
+while with ``backend_config={"known_trip_count":{"n":...}}``; this
+module parses the optimized HLO text, walks the computation graph and
+multiplies nested loop bodies by their trip counts, producing:
+
+* ``flops``       — 2 * numel(out) * K summed over every ``dot``
+                    (contracted size K resolved from operand shapes)
+* ``bytes``       — operand + result bytes of every materializing op
+                    (fusion parameters/outputs ~ XLA's bytes-accessed
+                    model = a good HBM-traffic proxy post-fusion)
+* ``collectives`` — per-type output bytes and op counts
+                    (all-gather / all-reduce / reduce-scatter /
+                    all-to-all / collective-permute)
+
+All values are per-device (the SPMD module is the per-device program).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCosts"]
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^=]*?\)|\S+(?:\{[\d,]*\})?)\s+([\w\-]+)\((.*)$"
+)
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR_RE = re.compile(r"(?:body|to_apply)=%?([\w\.\-]+)")
+_COND_ATTR_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+# ops that do not move HBM bytes
+_FREE_OPS = {
+    "parameter", "get-tuple-element", "tuple", "constant", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id",
+}
+
+
+def _shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    return [
+        (dt, [int(d) for d in dims.split(",")] if dims else [])
+        for dt, dims in _SHAPE_RE.findall(shape_str)
+        if dt in _DTYPE_BYTES
+    ]
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class _Op:
+    name: str
+    shape: str
+    opcode: str
+    rest: str  # operands + attributes
+
+
+@dataclass
+class _Comp:
+    name: str
+    ops: List[_Op] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    @property
+    def total_collective_count(self) -> float:
+        return sum(self.collective_counts.values())
+
+    def scaled(self, k: float) -> "HloCosts":
+        return HloCosts(
+            self.flops * k,
+            self.bytes * k,
+            {o: b * k for o, b in self.collective_bytes.items()},
+            {o: c * k for o, c in self.collective_counts.items()},
+        )
+
+    def add(self, other: "HloCosts") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for o, b in other.collective_bytes.items():
+            self.collective_bytes[o] = self.collective_bytes.get(o, 0.0) + b
+        for o, c in other.collective_counts.items():
+            self.collective_counts[o] = self.collective_counts.get(o, 0.0) + c
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_counts": dict(self.collective_counts),
+            "total_collective_bytes": self.total_collective_bytes,
+            "total_collective_count": self.total_collective_count,
+        }
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    entry = None
+    current: Optional[_Comp] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if current is None:
+            m = _HEADER_RE.match(line)
+            if m and line.endswith("{"):
+                current = _Comp(m.group(2))
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line == "}":
+            comps[current.name] = current
+            current = None
+            continue
+        line = re.sub(r"/\*.*?\*/", "", line)  # strip /*index=N*/ comments
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, shape, opcode, rest = m.groups()
+        op = _Op(name, shape, opcode, rest)
+        current.ops.append(op)
+        current.shapes[name] = shape
+    return comps, entry
+
+
+def _dot_flops(op: _Op, comp: _Comp) -> float:
+    out_elems = 0
+    for _dt, dims in _shape_dims(op.shape):
+        n = 1
+        for d in dims:
+            n *= d
+        out_elems += n
+    # contracted size from the lhs operand shape
+    mm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    operands = _OPERAND_RE.findall(op.rest.split(")")[0])
+    k = 1
+    if mm and operands:
+        lhs_shape = comp.shapes.get(operands[0])
+        if lhs_shape:
+            dims = _shape_dims(lhs_shape)
+            if dims:
+                lhs_dims = dims[0][1]
+                for idx in (int(i) for i in mm.group(1).split(",") if i):
+                    if idx < len(lhs_dims):
+                        k *= lhs_dims[idx]
+    return 2.0 * out_elems * k
+
+
+def _op_bytes(op: _Op, comp: _Comp) -> float:
+    total = float(_shape_bytes(op.shape))
+    operand_str = op.rest.split("), ")[0]
+    for name in _OPERAND_RE.findall(operand_str):
+        s = comp.shapes.get(name)
+        if s:
+            total += _shape_bytes(s)
+    return total
+
+
+def analyze_hlo(text: str) -> HloCosts:
+    comps, entry = _parse_computations(text)
+    memo: Dict[str, HloCosts] = {}
+    # computations referenced by fusion ops are internal (no HBM traffic)
+    fusion_callees = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                mm = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+                if mm:
+                    fusion_callees.add(mm.group(1))
+
+    def visit(name: str) -> HloCosts:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        total = HloCosts()
+        if comp is None:
+            memo[name] = total
+            return total
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                trips = 1
+                mt = _TRIP_RE.search(op.rest)
+                if mt:
+                    trips = int(mt.group(1))
+                mb = _CALL_ATTR_RE.search(op.rest)
+                if mb:
+                    total.add(visit(mb.group(1)).scaled(trips))
+                mc = _COND_ATTR_RE.search(op.rest)
+                if mc:
+                    total.add(visit(mc.group(1)).scaled(trips))
+                continue
+            if oc in ("call", "conditional", "async-start"):
+                for callee in _CALL_ATTR_RE.findall(op.rest):
+                    total.add(visit(callee))
+                # conditional: branch_computations={%a, %b}
+                mbr = re.search(r"branch_computations=\{([^}]*)\}", op.rest)
+                if mbr:
+                    for callee in _OPERAND_RE.findall(mbr.group(1)):
+                        total.add(visit(callee))
+                continue
+            base = oc.replace("-start", "") if oc.endswith("-start") else oc
+            if base in COLLECTIVE_OPS:
+                b = float(_shape_bytes(op.shape))
+                total.collective_bytes[base] = total.collective_bytes.get(base, 0.0) + b
+                total.collective_counts[base] = total.collective_counts.get(base, 0.0) + 1
+                total.bytes += b
+                continue
+            if oc == "dot":
+                total.flops += _dot_flops(op, comp)
+                total.bytes += _op_bytes(op, comp)
+                continue
+            if oc in _FREE_OPS or oc.endswith("-done"):
+                continue
+            total.bytes += _op_bytes(op, comp)
+        memo[name] = total
+        return total
+
+    if entry is None:
+        return HloCosts()
+    # ENTRY only; computations reached via fusion are intentionally not
+    # visited (their traffic is the fusion op's operands/results).
+    return visit(entry)

@@ -1,0 +1,40 @@
+"""Serving driver: batched generation with runtime precision modes.
+
+Smoke (CPU):
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2_2b --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mode", default="precise", choices=["precise", "fast"])
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    from repro.configs import smoke
+    from repro.core.precision import Mode
+    from repro.models import init_params
+    from repro.runtime.serve import BatchedServer, ServerConfig
+
+    cfg = smoke(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    srv = BatchedServer(
+        cfg, params,
+        ServerConfig(max_batch=4, max_len=128, max_new=args.max_new,
+                     start_mode=Mode(args.mode)),
+    )
+    prompts = [[1, 2, 3, 4, 5], [10, 11, 12], [7, 7, 7, 7], [3, 1, 4, 1, 5, 9]]
+    for i, seq in enumerate(srv.generate(prompts)):
+        print(f"req{i}: {seq}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,380 @@
+"""Cell builder: (architecture x input shape x mesh x mode) -> a jitted
+step function + ShapeDtypeStruct inputs + shardings.
+
+This is the single source of truth used by the multi-pod dry-run, the
+roofline benchmarks and the real train/serve drivers, so what we
+compile in the dry-run IS the production step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.sharding import (
+    RuleSet,
+    batch_pspec,
+    serve_rules,
+    train_rules,
+    tree_shardings,
+)
+from repro.models import init_caches, param_specs
+from repro.models.config import ModelConfig
+from repro.models.layers import Spec
+from repro.models.model import decode_step, prefill_step, train_loss
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state, opt_state_specs
+
+__all__ = ["SHAPES", "ShapeCell", "SkipCell", "build_cell", "cell_ids"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    kind: str       # 'train' | 'prefill' | 'decode'
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode", 32768, 128),
+    "long_500k": ShapeCell("decode", 524288, 1),
+}
+
+
+class SkipCell(Exception):
+    """Raised when a cell is skipped by assignment rules (with reason)."""
+
+
+def cell_ids():
+    from repro.configs import ARCH_IDS
+
+    return [(a, s) for a in ARCH_IDS for s in SHAPES]
+
+
+def _sds(spec: Spec, dtype=None):
+    return jax.ShapeDtypeStruct(spec.shape, dtype or spec.dtype)
+
+
+def _specs_to_sds(tree, dtype=None):
+    return jax.tree.map(
+        lambda s: _sds(s, dtype), tree, is_leaf=lambda x: isinstance(x, Spec)
+    )
+
+
+def _make_constrain(rs: RuleSet, batch: int, seq: int):
+    mesh = rs.mesh
+    bspec = batch_pspec(rs, batch, extra_dims=0)
+    batch_names = bspec[0]
+    seq_axis = rs.rules.get("seq")
+    model_size = mesh.shape.get("model", 1)
+
+    def constrain(x, kind):
+        if kind == "residual" and x.ndim == 3:
+            s_name = (
+                seq_axis
+                if (seq_axis and x.shape[1] % model_size == 0 and x.shape[1] > 1)
+                else None
+            )
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(batch_names, s_name, None))
+            )
+        if kind == "moe4d" and x.ndim == 4:
+            # (B, E, C, d): keep batch sharded through gather/expert-mm
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(batch_names, None, None, None))
+            )
+        if kind == "moe3d" and x.ndim == 3:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(batch_names, None, None))
+            )
+        if kind == "heads4d" and x.ndim == 4:
+            # TP layout through the mixer: heads over model, full seq per
+            # device (the seq<->heads reshard happens here, once per layer)
+            h_name = "model" if x.shape[2] % model_size == 0 else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(batch_names, None, h_name, None))
+            )
+        return x
+
+    return constrain
+
+
+def _cache_shardings(caches, cfg: ModelConfig, rs: RuleSet, batch: int):
+    mesh = rs.mesh
+    bnames = batch_pspec(rs, batch, extra_dims=0)[0]
+    model = mesh.shape.get("model", 1)
+    data = mesh.shape.get("data", 1)
+
+    def seq_name(L: int, kv_sharded: bool = True):
+        """Sequence sharding of caches, two roles:
+
+        * context parallelism: batch axis idle (B=1 long-context) ->
+          seq over 'data';
+        * kv-head fallback: kv heads not divisible by 'model' (kv=8 or
+          4 vs 16) -> seq over 'model' instead, so the cache still
+          shards 16-ways (GSPMD turns the softmax over the sharded
+          length into tiny max/sum all-reduces).
+        """
+        axes = []
+        if bnames is None:
+            axes.append("data")
+        if not kv_sharded:
+            axes.append("model")
+        if not axes:
+            return None
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if L % size != 0 or L < size:
+            # retry with 'data' alone
+            if "data" in axes and L % data == 0 and L >= data:
+                axes = ["data"]
+            else:
+                return None
+        return axes[0] if len(axes) == 1 else tuple(axes)
+
+    def leaf_spec(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = x.ndim  # leading axis is n_periods
+        if name in ("k", "v"):           # (Pd, B, L, kv, hd)
+            kv_ok = x.shape[3] % model == 0
+            kv = "model" if kv_ok else None
+            return P(None, bnames, seq_name(x.shape[2], kv_ok), kv, None)
+        if name in ("k_exp", "v_exp"):   # (Pd, B, L, KV)
+            kv_ok = x.shape[3] % model == 0
+            return P(None, bnames, seq_name(x.shape[2], kv_ok),
+                     "model" if kv_ok else None)
+        if name == "pos":                # (Pd, B, L)
+            # must shard exactly like k/v's L dim; kv divisibility comes
+            # from the config, not this leaf
+            kv_ok = (cfg.n_kv_heads % model == 0) if cfg.n_kv_heads else True
+            if cfg.mla is not None:
+                kv_ok = False
+            return P(None, bnames, seq_name(x.shape[2], kv_ok))
+        if name in ("ckv", "krope"):     # (Pd, B, L, r) — MLA latent: no head dim
+            return P(None, bnames, seq_name(x.shape[2], False), None)
+        if name == "state":              # (Pd, B, nh, ds, hd)
+            nh = "model" if x.shape[2] % model == 0 else None
+            return P(None, bnames, nh, None, None)
+        if name == "conv":               # (Pd, B, K-1, conv_dim)
+            cd = "model" if x.shape[3] % model == 0 else None
+            return P(None, bnames, None, cd)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(mesh, leaf_spec(p, x)), caches
+    )
+
+
+def _check_long_context(cfg: ModelConfig, shape_id: str):
+    if shape_id == "long_500k" and not cfg.is_subquadratic:
+        raise SkipCell(
+            f"{cfg.name}: long_500k skipped — pure full-attention architecture "
+            "(assignment: run only for SSM/hybrid/sliding-window archs; see DESIGN.md §4)"
+        )
+
+
+#: microbatch counts for activation-heavy train cells (grad accumulation)
+GRAD_ACCUM = {
+    "mixtral-8x22b": 8,
+    "jamba-v0.1-52b": 16,
+    "command-r-35b": 2,
+    "minicpm3-4b": 2,
+    "granite-moe-3b-a800m": 2,
+    "mamba2-1.3b": 2,
+}
+
+
+def build_cell(
+    arch: str,
+    shape_id: str,
+    mesh: Mesh,
+    mode: str = "precise",
+    *,
+    fsdp: bool = True,
+    remat: bool = True,
+    opt_cfg: Optional[AdamWConfig] = None,
+    grad_accum: Optional[int] = None,
+    sharding: str = "default",
+):
+    """Returns (jitted_fn, example_args (SDS pytree), meta dict).
+
+    ``jitted_fn.lower(*example_args)`` is the dry-run; calling it with
+    real arrays is the production step.
+    """
+    cfg = get_config(arch)
+    cell = SHAPES[shape_id]
+    _check_long_context(cfg, shape_id)
+
+    if cell.kind == "train":
+        accum = grad_accum if grad_accum is not None else GRAD_ACCUM.get(cfg.name, 1)
+        return _build_train(
+            cfg, cell, mesh, mode, fsdp=fsdp, remat=remat, opt_cfg=opt_cfg,
+            grad_accum=accum, sharding=sharding,
+        )
+    if cell.kind == "prefill":
+        return _build_prefill(cfg, cell, mesh, mode)
+    return _build_decode(cfg, cell, mesh, mode)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _batch_specs(cfg: ModelConfig, cell: ShapeCell, rs: RuleSet):
+    B, S = cell.batch, cell.seq
+    toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    specs = {"tokens": toks, "labels": toks}
+    shard = {
+        "tokens": NamedSharding(rs.mesh, batch_pspec(rs, B)),
+        "labels": NamedSharding(rs.mesh, batch_pspec(rs, B)),
+    }
+    if cfg.modality_stub:
+        specs["extra_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.stub_prefix_len, cfg.d_model), jnp.bfloat16
+        )
+        shard["extra_embeds"] = NamedSharding(rs.mesh, batch_pspec(rs, B, extra_dims=2))
+    return specs, shard
+
+
+def _build_train(cfg, cell, mesh, mode, *, fsdp, remat, opt_cfg, grad_accum: int = 1,
+                 sharding: str = "default"):
+    rs = train_rules(mesh, fsdp=fsdp, pure_fsdp=(sharding == "pure_fsdp"))
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    p_specs = param_specs(cfg)
+    p_shard = tree_shardings(p_specs, rs)
+    p_sds = _specs_to_sds(p_specs)
+    o_specs = opt_state_specs(p_specs)
+    o_shard = tree_shardings(o_specs, rs)
+    o_sds = _specs_to_sds(o_specs)
+    b_sds, b_shard = _batch_specs(cfg, cell, rs)
+    constrain = _make_constrain(rs, cell.batch, cell.seq)
+
+    grad_fn = jax.value_and_grad(
+        lambda p, b: train_loss(p, b, cfg, mode=mode, constrain=constrain, remat=remat),
+        has_aux=True,
+    )
+
+    def step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            # gradient accumulation: scan over microbatches — activation
+            # memory is one microbatch's worth (EXPERIMENTS.md §Perf P4)
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum) + x.shape[1:]),
+                batch,
+            )
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = grad_fn(params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), metrics = jax.lax.scan(acc_step, (g0, jnp.float32(0)), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+            metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics)
+        new_params, new_opt, opt_metrics = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, None),
+        donate_argnums=(0, 1),
+    )
+    meta = {
+        "arch": cfg.name, "shape": f"{cell.kind}", "mode": mode,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+        "batch": cell.batch, "seq": cell.seq, "kind": "train",
+        "dropped_rules": rs.dropped,
+    }
+    return jitted, (p_sds, o_sds, b_sds), meta
+
+
+def _serve_ruleset(cfg, mesh):
+    model = mesh.shape.get("model", 1)
+    wbytes_dev = 2 * cfg.param_count() / model  # bf16, model-sharded only
+    return serve_rules(mesh, weight_fsdp=wbytes_dev > 5 * 2**30)
+
+
+def _build_prefill(cfg, cell, mesh, mode):
+    rs = _serve_ruleset(cfg, mesh)
+    p_specs = param_specs(cfg)
+    p_shard = tree_shardings(p_specs, rs)
+    p_sds = _specs_to_sds(p_specs, dtype=jnp.bfloat16)
+    b_sds, b_shard = _batch_specs(cfg, cell, rs)
+    constrain = _make_constrain(rs, cell.batch, cell.seq)
+
+    caches = jax.eval_shape(lambda: init_caches(cfg, cell.batch, cell.seq,
+                                                quantized=(mode == "fast")))
+    c_shard = _cache_shardings(caches, cfg, rs, cell.batch)
+    c_sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), caches)
+
+    extra = (b_sds.get("extra_embeds"),) if cfg.modality_stub else ()
+
+    def step(params, tokens, caches, *extra_embeds):
+        ee = extra_embeds[0] if extra_embeds else None
+        return prefill_step(params, tokens, caches, cfg, mode=mode, constrain=constrain,
+                            extra_embeds=ee)
+
+    in_sh = (p_shard, b_shard["tokens"], c_shard) + (
+        (b_shard["extra_embeds"],) if cfg.modality_stub else ()
+    )
+    jitted = jax.jit(
+        step,
+        in_shardings=in_sh,
+        out_shardings=(None, c_shard),
+        donate_argnums=(2,),
+    )
+    args = (p_sds, b_sds["tokens"], c_sds) + extra
+    meta = {
+        "arch": cfg.name, "mode": mode, "batch": cell.batch, "seq": cell.seq,
+        "kind": "prefill", "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(), "dropped_rules": rs.dropped,
+    }
+    return jitted, args, meta
+
+
+def _build_decode(cfg, cell, mesh, mode):
+    rs = _serve_ruleset(cfg, mesh)
+    p_specs = param_specs(cfg)
+    p_shard = tree_shardings(p_specs, rs)
+    p_sds = _specs_to_sds(p_specs, dtype=jnp.bfloat16)
+
+    B = cell.batch
+    tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tok_sh = NamedSharding(rs.mesh, batch_pspec(rs, B))
+    pos_sh = NamedSharding(rs.mesh, batch_pspec(rs, B, extra_dims=0))
+
+    caches = jax.eval_shape(lambda: init_caches(cfg, B, cell.seq,
+                                                quantized=(mode == "fast")))
+    c_shard = _cache_shardings(caches, cfg, rs, B)
+    c_sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), caches)
+    constrain = _make_constrain(rs, B, 1)
+
+    def step(params, token, position, caches):
+        return decode_step(params, token, position, caches, cfg, mode=mode, constrain=constrain)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_shard, tok_sh, pos_sh, c_shard),
+        out_shardings=(None, c_shard),
+        donate_argnums=(3,),
+    )
+    meta = {
+        "arch": cfg.name, "mode": mode, "batch": B, "seq": cell.seq,
+        "kind": "decode", "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(), "dropped_rules": rs.dropped,
+    }
+    return jitted, (p_sds, tok_sds, pos_sds, c_sds), meta

@@ -1,0 +1,83 @@
+"""Production training driver.
+
+Single-host CPU smoke:
+    PYTHONPATH=src python -m repro.launch.train --arch deepseek_7b --smoke --steps 20
+
+Production (TPU pod; same code, real mesh):
+    python -m repro.launch.train --arch mixtral_8x22b --shape train_4k \
+        --mesh single --steps 10000 --mode fast --arbiter
+
+On a real multi-host deployment jax.distributed.initialize() is called
+first (env-driven); this container has one CPU device, so --smoke uses
+the family-preserving reduced config and the local device.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--mode", default="precise", choices=["precise", "fast"])
+    ap.add_argument("--arbiter", action="store_true")
+    ap.add_argument("--smoke", action="store_true", help="reduced config, local device")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    if args.smoke or args.mesh is None:
+        from repro.configs import smoke
+        from repro.core.precision import Mode
+        from repro.runtime.train_loop import Trainer, TrainerConfig
+
+        cfg = smoke(args.arch)
+        tcfg = TrainerConfig(
+            total_steps=args.steps,
+            ckpt_every=max(args.steps // 4, 1),
+            ckpt_dir=args.ckpt_dir,
+            start_mode=Mode(args.mode),
+            use_arbiter=args.arbiter,
+        )
+        out = Trainer(cfg, tcfg).run()
+        print(f"final loss {out['final_loss']:.4f} after {args.steps} steps "
+              f"({out['switches']} precision switches)")
+        return
+
+    # production path: build the sharded cell and run it step by step
+    if jax.process_count() == 1 and len(jax.devices()) < 256:
+        raise SystemExit(
+            "production mesh requested but this host has "
+            f"{len(jax.devices())} devices; use --smoke here, or launch on the pod "
+            "(the multi-pod configuration is validated by repro.launch.dryrun)"
+        )
+    from repro.launch.mesh import make_mesh_by_name
+    from repro.launch.steps import build_cell
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.optim.adamw import init_opt_state
+    import jax.numpy as jnp
+
+    mesh = make_mesh_by_name(args.mesh)
+    jitted, sds, meta = build_cell(args.arch, args.shape, mesh, args.mode)
+    cfg = get_config(args.arch)
+    with mesh:
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opt = init_opt_state(params)
+        data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=4096, global_batch=256))
+        for step in range(args.steps):
+            batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+            params, opt, metrics = jitted(params, opt, batch)
+            if step % 10 == 0:
+                print(f"step {step}: loss {float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,240 @@
+"""Shared layers: parameter specs with logical sharding axes, RMSNorm,
+SwiGLU MLP, rotary embeddings (precise fp32 or fast CORDIC fixed-point),
+and the precision-dispatched matmul ``pdot`` — the paper's dispatch
+table 𝒟 applied at the op level inside models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Spec",
+    "init_from_specs",
+    "rms_norm",
+    "softcap",
+    "pdot",
+    "dot_fast_int8",
+    "rope_tables",
+    "apply_rope",
+    "swiglu_mlp",
+    "mlp_specs",
+    "attn_norm_spec",
+]
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """Declares one parameter: shape + logical axes + init law.
+
+    ``axes`` are *logical* names ('embed', 'heads', 'mlp', 'vocab',
+    'expert', 'ssm', None) resolved to mesh axes by
+    repro.distributed.sharding rules at launch time.
+    """
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: jnp.dtype = jnp.float32
+    init: str = "normal"       # 'normal' | 'zeros' | 'ones' | 'uniform'
+    scale: Optional[float] = None  # default: 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def initializer(self, key):
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        fan_in = self.shape[0] if len(self.shape) > 1 else self.shape[-1]
+        scale = self.scale if self.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        if self.init == "uniform":
+            return jax.random.uniform(key, self.shape, self.dtype, -scale, scale)
+        return jax.random.normal(key, self.shape, self.dtype) * scale
+
+
+def init_from_specs(specs, key):
+    """Materialize a pytree of Specs into parameters (smoke scale only)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, Spec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [s.initializer(k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    """RMSNorm with fp32 accumulation (precise-path op by policy: norms
+    stay on f^F even in FAST mode — the paper's per-op dispatch)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def softcap(x, cap: Optional[float]):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# precision-dispatched matmul (the per-op 𝒟 inside models)
+# ---------------------------------------------------------------------------
+
+
+def _quant_dims(x, w):
+    """per-tensor activation exponent, per-out-channel weight exponents."""
+    from repro.core.quantization import quantize_pow2
+
+    xq = quantize_pow2(x, bits=8, axis=None)
+    wq = quantize_pow2(w, bits=8, axis=w.ndim - 1)
+    return xq, wq
+
+
+@jax.custom_vjp
+def dot_fast_int8(x, w):
+    """W8A8 matmul, kernel-equivalent XLA form: int8 x int8 -> int32 MXU
+    accumulation, ONE deferred power-of-two rescale (paper C3).
+
+    This is the exact computation the Pallas kernel
+    (kernels/qmatmul) performs on real TPU; expressed as
+    ``lax.dot_general(..., preferred_element_type=int32)`` it lowers on
+    every backend and is what the multi-pod dry-run compiles.  Backward
+    is the straight-through estimator (float grads).
+    """
+    return _dot_fast_fwd_impl(x, w)
+
+
+def _dot_fast_fwd_impl(x, w):
+    xq, wq = _quant_dims(x, w)
+    acc = jax.lax.dot_general(
+        xq.q,
+        wq.q,
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    e = (xq.exp + wq.exp.reshape(-1)).astype(jnp.float32)
+    return acc.astype(jnp.float32) * jnp.exp2(e)
+
+
+def _dot_fast_fwd(x, w):
+    return _dot_fast_fwd_impl(x, w), (x, w)
+
+
+def _dot_fast_bwd(res, g):
+    x, w = res
+    g = g.astype(jnp.float32)
+    gx = jax.lax.dot_general(
+        g, w.astype(jnp.float32), (((g.ndim - 1,), (1,)), ((), ()))
+    ).astype(x.dtype)
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    g2 = g.reshape(-1, g.shape[-1])
+    gw = jnp.matmul(x2.T, g2).astype(w.dtype)
+    return gx, gw
+
+
+dot_fast_int8.defvjp(_dot_fast_fwd, _dot_fast_bwd)
+
+
+def pdot(x, w, mode: str = "precise"):
+    """𝒟[matmul]: FAST -> W8A8 deferred-rescale path; PRECISE -> bf16
+    MXU (per-device f32 accumulation is implicit in the TPU MXU).
+
+    Deliberately bf16-in/bf16-out with NO preferred_element_type=f32 +
+    downcast: that pattern pins every TP partial-sum all-reduce and
+    every backward reshard to fp32 (XLA cannot commute the convert
+    through the reduction), doubling collective bytes.  Cross-device
+    partial sums in bf16 are the Megatron-standard trade.
+    """
+    if mode == "fast":
+        return dot_fast_int8(x, w).astype(jnp.bfloat16)
+    return jax.lax.dot_general(
+        x.astype(jnp.bfloat16),
+        w.astype(jnp.bfloat16),
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+    )
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings: 𝒟[sin/cos]
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("rope_dim", "base", "mode"))
+def rope_tables(positions, rope_dim: int, base: float = 10000.0, mode: str = "precise"):
+    """(… ) int positions -> (…, rope_dim//2) sin/cos tables.
+
+    PRECISE: fp32 ``jnp.sin/cos`` of ``pos * inv_freq``.
+    FAST: exact Q0.64 phase accumulation + 16-iteration CORDIC
+    (core/cordic) — integer-only, and *more accurate* than the fp32
+    path at long-context positions (tests/test_cordic.py).
+    """
+    half = rope_dim // 2
+    if mode == "fast":
+        from repro.core.cordic import exact_rope_phase_q16, cordic_sincos_q16, rope_inv_freq_q64
+        from repro.core.qformat import Q16_16, from_fixed
+
+        f_hi, f_lo = rope_inv_freq_q64(rope_dim, base)
+        theta_q = exact_rope_phase_q16(
+            positions[..., None], jnp.asarray(f_hi)[None, :], jnp.asarray(f_lo)[None, :]
+        )
+        sin_q, cos_q = cordic_sincos_q16(theta_q)
+        return from_fixed(sin_q, Q16_16), from_fixed(cos_q, Q16_16)
+    inv_freq = (base ** (-2.0 * jnp.arange(half, dtype=jnp.float32) / rope_dim))
+    angle = positions[..., None].astype(jnp.float32) * inv_freq
+    return jnp.sin(angle), jnp.cos(angle)
+
+
+def apply_rope(x, sin, cos):
+    """x: (..., S, H, D); sin/cos: (..., S, D//2) broadcast over heads.
+    Half-split (llama) convention."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    sin = sin[..., None, :]  # add head axis
+    cos = cos[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(d_model: int, d_ff: int) -> dict:
+    return {
+        "norm": Spec((d_model,), ("embed",), init="zeros"),
+        "w_gate": Spec((d_model, d_ff), ("embed", "mlp")),
+        "w_up": Spec((d_model, d_ff), ("embed", "mlp")),
+        "w_down": Spec((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def attn_norm_spec(d_model: int) -> Spec:
+    return Spec((d_model,), ("embed",), init="zeros")
+
+
+def swiglu_mlp(params, x, mode: str = "precise", eps: float = 1e-5):
+    h = rms_norm(x, params["norm"], eps)
+    gate = pdot(h, params["w_gate"], mode)
+    up = pdot(h, params["w_up"], mode)
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(up.dtype) * up
+    return pdot(act, params["w_down"], mode)

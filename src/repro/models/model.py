@@ -1,0 +1,283 @@
+"""The language model: embeddings -> scanned periods -> head.
+
+Public step functions (all pure, jit/pjit-ready):
+
+``train_loss``    — causal LM loss with sequence-chunked cross-entropy
+                    (never materializes (B, S, V) logits), MoE aux
+                    losses, z-loss; remat over periods.
+``prefill_step``  — segment forward, returns last-position logits and
+                    populated caches.
+``decode_step``   — one token against caches.
+
+Modality stubs (phi-3-vision, musicgen): ``extra_embeds`` (B, P, d) are
+pre-computed patch/frame embeddings added onto the first P token
+positions — the backbone is the assigned architecture; the frontend is
+out of scope per the assignment.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Spec, init_from_specs, rms_norm, softcap
+from repro.models.transformer import init_period_cache, period_forward, period_specs
+
+__all__ = [
+    "param_specs",
+    "init_params",
+    "init_caches",
+    "train_loss",
+    "prefill_step",
+    "decode_step",
+]
+
+Constrain = Callable[[jnp.ndarray, str], jnp.ndarray]
+_id: Constrain = lambda x, kind: x
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def _stack_spec(s: Spec, n: int) -> Spec:
+    return Spec((n,) + s.shape, ("layer",) + s.axes, s.dtype, s.init, s.scale)
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    period = period_specs(cfg)
+    stacked = jax.tree.map(
+        lambda s: _stack_spec(s, cfg.n_periods),
+        period,
+        is_leaf=lambda x: isinstance(x, Spec),
+    )
+    out = {
+        "embed": Spec((cfg.vocab, cfg.d_model), ("vocab", "embed"), scale=0.02),
+        "periods": stacked,
+        "final_norm": Spec((cfg.d_model,), ("embed",), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = Spec((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    return out
+
+
+# Alias used by config.param_count()
+param_shapes = param_specs
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    params = init_from_specs(param_specs(cfg), key)
+    return jax.tree.map(lambda x: x.astype(dtype), params)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+                quantized: bool = False):
+    """Stacked (n_periods, ...) cache pytree.  quantized=True stores
+    attention KV in Q-format int8 (+ per-slot exponents)."""
+    one = init_period_cache(cfg, batch, max_len, dtype, quantized=quantized)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_periods,) + x.shape).copy(), one
+    )
+
+
+# ---------------------------------------------------------------------------
+# backbone
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, tokens, cfg: ModelConfig, extra_embeds=None):
+    # cast BEFORE the gather: the FSDP all-gather of the table (and the
+    # row gather itself) then moves bf16, not the f32 master copy
+    x = jnp.take(params["embed"].astype(jnp.bfloat16), tokens, axis=0)
+    if extra_embeds is not None and cfg.stub_prefix_len:
+        P = cfg.stub_prefix_len
+        x = jnp.concatenate(
+            [x[:, :P] + extra_embeds.astype(x.dtype), x[:, P:]], axis=1
+        )
+    return x
+
+
+def _backbone_train(params, x, cfg: ModelConfig, positions, mode, constrain, remat: bool):
+    def body(carry, period_params):
+        h, aux = carry
+        h2, _, a = period_forward(
+            period_params, h, cfg, positions=positions, mode=mode, constrain=constrain
+        )
+        return (h2, aux + a), None
+
+    fn = jax.checkpoint(body, prevent_cse=False) if remat else body
+    (x, aux), _ = jax.lax.scan(fn, (x, jnp.zeros((2,), jnp.float32)), params["periods"])
+    return x, aux
+
+
+def _lm_head(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# training loss (chunked CE)
+# ---------------------------------------------------------------------------
+
+
+def _chunked_ce(hidden, head, labels, mask, cfg: ModelConfig, chunk: int = 256):
+    """hidden (B,S,d), head (d,V), labels (B,S) -> (sum_loss, sum_zloss, count).
+
+    Scans sequence chunks; the (B, chunk, V) logits are transient.
+    """
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+
+    h_c = hidden.reshape(B, n, chunk, d).swapaxes(0, 1)
+    l_c = labels.reshape(B, n, chunk).swapaxes(0, 1)
+    m_c = mask.reshape(B, n, chunk).swapaxes(0, 1)
+
+    def step(carry, blk):
+        loss_s, z_s, cnt = carry
+        h, lab, m = blk
+        logits = jnp.dot(
+            h.astype(jnp.bfloat16), head.astype(jnp.bfloat16),
+            preferred_element_type=jnp.float32,
+        )
+        logits = softcap(logits, cfg.final_softcap)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        ce = (lse - gold) * m
+        return (loss_s + ce.sum(), z_s + ((lse * m) ** 2).sum(), cnt + m.sum()), None
+
+    init = (jnp.float32(0), jnp.float32(0), jnp.float32(0))
+    (loss_s, z_s, cnt), _ = jax.lax.scan(step, init, (h_c, l_c, m_c))
+    return loss_s, z_s, cnt
+
+
+def train_loss(
+    params,
+    batch: dict,
+    cfg: ModelConfig,
+    mode: str = "precise",
+    constrain: Constrain = _id,
+    remat: bool = True,
+    z_coef: float = 1e-4,
+):
+    """batch: tokens (B,S), labels (B,S), optional loss_mask, extra_embeds.
+
+    Returns (loss, metrics dict).
+    """
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    x = _embed(params, tokens, cfg, batch.get("extra_embeds"))
+    x = constrain(x, "residual")
+    x, aux = _backbone_train(params, x, cfg, positions, mode, constrain, remat)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+
+    loss_s, z_s, cnt = _chunked_ce(x, _lm_head(params, cfg), labels, mask, cfg)
+    ce = loss_s / jnp.maximum(cnt, 1.0)
+    z_loss = z_coef * z_s / jnp.maximum(cnt, 1.0)
+    loss = ce + z_loss
+    metrics = {"ce": ce, "z_loss": z_loss, "tokens": cnt}
+    if cfg.moe is not None:
+        lb, rz = aux[0] / cfg.n_periods, aux[1] / cfg.n_periods
+        loss = loss + cfg.moe.aux_loss_coef * lb + cfg.moe.router_z_coef * rz
+        metrics.update({"moe_lb": lb, "moe_z": rz})
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+
+def _scan_with_caches(params, x, caches, cfg, positions, mode, constrain, *, prefill):
+    """Scan periods with the stacked cache in the CARRY, updated in
+    place via dynamic_update_index — ONE cache buffer end to end.
+
+    (Passing caches as scan xs/ys double-buffers them: the stacked ys
+    output is distinct from the xs input, costing a full extra cache
+    per device — fatal for 32k decode cells.  Measured in EXPERIMENTS.md
+    §Perf iteration P2.)
+    """
+
+    def body(carry, xs):
+        h, all_caches = carry
+        period_params, i = xs
+        cache_i = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, i, 0, keepdims=False), all_caches
+        )
+        h2, new_cache, _ = period_forward(
+            period_params, h, cfg,
+            positions=positions, mode=mode, caches=cache_i, prefill=prefill,
+            constrain=constrain,
+        )
+        all_caches = jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(c, n.astype(c.dtype), i, 0),
+            all_caches, new_cache,
+        )
+        return (h2, all_caches), None
+
+    (x, new_caches), _ = jax.lax.scan(
+        body, (x, caches),
+        (params["periods"], jnp.arange(cfg.n_periods, dtype=jnp.int32)),
+    )
+    return x, new_caches
+
+
+def prefill_step(
+    params,
+    tokens,
+    caches,
+    cfg: ModelConfig,
+    mode: str = "precise",
+    constrain: Constrain = _id,
+    extra_embeds=None,
+):
+    """tokens (B,S) from position 0; returns (last_logits (B,V), caches')."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = _embed(params, tokens, cfg, extra_embeds)
+    x, new_caches = _scan_with_caches(params, x, caches, cfg, positions, mode, constrain, prefill=True)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.rms_eps)
+    logits = jnp.dot(
+        x[:, 0].astype(jnp.bfloat16),
+        _lm_head(params, cfg).astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+    return softcap(logits, cfg.final_softcap), new_caches
+
+
+def decode_step(
+    params,
+    token,
+    position,
+    caches,
+    cfg: ModelConfig,
+    mode: str = "precise",
+    constrain: Constrain = _id,
+):
+    """token (B,1) at scalar-per-batch ``position`` (B,) -> (logits, caches')."""
+    B = token.shape[0]
+    positions = position.reshape(B, 1).astype(jnp.int32)
+    x = _embed(params, token, cfg)
+    x, new_caches = _scan_with_caches(params, x, caches, cfg, positions, mode, constrain, prefill=False)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = jnp.dot(
+        x[:, 0].astype(jnp.bfloat16),
+        _lm_head(params, cfg).astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+    return softcap(logits, cfg.final_softcap), new_caches

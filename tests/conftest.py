@@ -1,0 +1,21 @@
+"""Test harness config.
+
+IMPORTANT: no XLA_FLAGS / device-count overrides here — smoke tests and
+benches must see the real single CPU device.  Multi-device sharding
+tests spawn subprocesses with their own XLA_FLAGS (see
+tests/test_dryrun.py).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import settings
+
+# Keep hypothesis deadlines off: jit compilation on first example would
+# blow any wall-clock deadline and has nothing to do with correctness.
+settings.register_profile("repro", deadline=None, max_examples=60, derandomize=True)
+settings.load_profile("repro")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(42)  # the paper's seed

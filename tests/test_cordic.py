@@ -1,0 +1,180 @@
+"""C2 validation: CORDIC sincos vs math oracle; paper §3.2 bounds and
+§5.2 constants; the exact long-context RoPE phase (beyond paper)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import cordic as cd
+from repro.core.qformat import Q16_16, from_fixed, to_fixed
+
+
+# ---------------------------------------------------------------------------
+# paper §5.2 constants
+# ---------------------------------------------------------------------------
+
+
+def test_paper_constants():
+    assert cd.CORDIC_K_INV_Q16 == 39797
+    assert cd.PI_Q16 == 205887
+    assert cd.HALF_PI_Q16 == 102944
+    assert cd.TWO_PI_Q16 == 411775
+    assert list(cd.ATAN_TABLE_Q16[:7]) == [51472, 30386, 16055, 8150, 4091, 2047, 1024]
+    # paper §4.3.2: the table is 64 bytes of rodata
+    assert cd.ATAN_TABLE_Q16.nbytes == 64
+
+
+def test_gain_limit():
+    # K_n -> 1.6467602 (paper Eq. 13)
+    k_inv = cd.gain_inverse(32, frac_bits=30) / (1 << 30)
+    assert 1.0 / k_inv == pytest.approx(1.6467602, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# accuracy: angular bound (Eq. 14) + Q16.16 datapath rounding
+# ---------------------------------------------------------------------------
+
+# The pure angular bound is 2**-16 rad; the fixed-point datapath adds
+# bounded shift-rounding noise (~n * ulp amplified by the gain), giving
+# a practical bound near 6e-4 absolute. Measured max in
+# benchmarks/bench_trig.py; asserted conservatively here.
+ABS_TOL = 8e-4
+
+
+def test_dense_grid_accuracy():
+    theta = np.linspace(-math.pi, math.pi, 4001).astype(np.float32)
+    s, c = cd.cordic_sincos(theta)
+    np.testing.assert_allclose(np.asarray(s), np.sin(theta), atol=ABS_TOL)
+    np.testing.assert_allclose(np.asarray(c), np.cos(theta), atol=ABS_TOL)
+
+
+def test_full_turn_range_reduction():
+    """Any int32 Q16.16 angle is accepted (listing assumed [-pi, pi])."""
+    theta = np.linspace(-300.0, 300.0, 2001).astype(np.float32)
+    s, c = cd.cordic_sincos(theta)
+    np.testing.assert_allclose(np.asarray(s), np.sin(theta), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(c), np.cos(theta), atol=2e-3)
+
+
+@given(st.floats(min_value=-math.pi, max_value=math.pi, allow_nan=False))
+def test_pythagorean_identity(theta):
+    s, c = cd.cordic_sincos(np.float32(theta))
+    assert float(s) ** 2 + float(c) ** 2 == pytest.approx(1.0, abs=4e-3)
+
+
+def test_sin_negation_fold_bug_fixed():
+    """Paper Listing 2 claims sin needs no negation after the theta -> theta-pi
+    fold; that is wrong (sin(t-pi) = -sin t). Verify our fold is correct
+    in the second/third quadrants where the bug would bite."""
+    theta = np.array([2.0, 2.5, 3.0, -2.0, -2.5, -3.0], np.float32)
+    s, _ = cd.cordic_sincos(theta)
+    np.testing.assert_allclose(np.asarray(s), np.sin(theta), atol=ABS_TOL)
+    # sign must match exactly in these quadrants
+    assert np.all(np.sign(np.asarray(s)) == np.sign(np.sin(theta)))
+
+
+def test_iteration_convergence():
+    """Error shrinks ~2**-n with iteration count (paper Eq. 14 scaling),
+    until the Q16.16 datapath floor is reached."""
+    theta = np.linspace(-1.5, 1.5, 512).astype(np.float32)
+    errs = []
+    for n in (4, 8, 12):
+        s, _ = cd.cordic_sincos(theta, iterations=n)
+        errs.append(np.max(np.abs(np.asarray(s) - np.sin(theta))))
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[1] / errs[0] < 0.15  # ~2**-4 per 4 iterations
+
+
+def test_determinism_bitwise():
+    """The TPU analogue of the paper's Determinism Score 0.994: the
+    computation is bit-deterministic (same input -> same raw Q output)."""
+    theta_q = to_fixed(np.linspace(-3, 3, 257).astype(np.float32), Q16_16)
+    s1, c1 = cd.cordic_sincos_q16(theta_q)
+    s2, c2 = cd.cordic_sincos_q16(theta_q)
+    assert np.array_equal(np.asarray(s1), np.asarray(s2))
+    assert np.array_equal(np.asarray(c1), np.asarray(c2))
+
+
+# ---------------------------------------------------------------------------
+# cordic_rotate: data rotation (RoPE application primitive)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.floats(-1.0, 1.0, allow_nan=False),
+    st.floats(-1.0, 1.0, allow_nan=False),
+    st.floats(-math.pi, math.pi, allow_nan=False),
+)
+def test_rotate_matches_rotation_matrix(x, y, theta):
+    xq, yq = to_fixed(np.float32(x)), to_fixed(np.float32(y))
+    tq = to_fixed(np.float32(theta))
+    xr, yr = cd.cordic_rotate_q16(xq, yq, tq)
+    want_x = x * math.cos(theta) - y * math.sin(theta)
+    want_y = x * math.sin(theta) + y * math.cos(theta)
+    assert float(from_fixed(xr)) == pytest.approx(want_x, abs=2e-3)
+    assert float(from_fixed(yr)) == pytest.approx(want_y, abs=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# exact RoPE phase accumulation (beyond paper)
+# ---------------------------------------------------------------------------
+
+
+def test_exact_phase_matches_python_ints():
+    """The Q0.64 limb path must equal exact integer arithmetic."""
+    head_dim = 64
+    f_hi, f_lo = cd.rope_inv_freq_q64(head_dim, base=10000.0)
+    positions = np.array([0, 1, 2, 1000, 524287, 524288], np.uint32)
+    theta = np.asarray(cd.exact_rope_phase_q16(positions[:, None], f_hi[None, :], f_lo[None, :]))
+    for i, pos in enumerate(positions):
+        for j in range(head_dim // 2):
+            f = (int(f_hi[j]) << 32) | int(f_lo[j])
+            frac64 = (int(pos) * f) & ((1 << 64) - 1)
+            frac32 = frac64 >> 32
+            want = (frac32 * cd.TWO_PI_Q16 + (1 << 31)) >> 32
+            assert int(theta[i, j]) == want, (pos, j)
+
+
+def test_long_context_phase_beats_float32():
+    """At pos = 524288 the fp32 product pos*inv_freq loses ~5 bits before
+    the mod; the fixed-point path must be orders of magnitude closer to
+    the exact phase."""
+    head_dim = 128
+    base = 10000.0
+    f_hi, f_lo = cd.rope_inv_freq_q64(head_dim, base)
+    pos = 524288 - 1
+    # j=1: the fastest frequency whose inv_freq is NOT exactly
+    # representable in fp32 (j=0 gives exactly 1.0, which is error-free).
+    j = 1
+    inv_freq = base ** (-2.0 * j / head_dim)
+
+    # ground truth with python floats (exact integer pos, float64 mod)
+    exact_angle = math.fmod(pos * inv_freq, 2 * math.pi)
+
+    # fp32 baseline: the standard RoPE computation
+    fp32_angle = math.fmod(float(np.float32(pos) * np.float32(inv_freq)), 2 * math.pi)
+    fp32_err = abs(fp32_angle - exact_angle)
+
+    theta_q = cd.exact_rope_phase_q16(
+        np.uint32(pos), np.uint32(f_hi[j]), np.uint32(f_lo[j])
+    )
+    ours = float(int(theta_q)) / 65536.0
+    ours_err = min(
+        abs(ours - exact_angle), abs(ours - exact_angle - 2 * math.pi),
+        abs(ours - exact_angle + 2 * math.pi),
+    )
+    assert ours_err < 5e-5
+    assert fp32_err > 50 * ours_err, (fp32_err, ours_err)
+
+
+def test_rope_tables_shapes_and_identity():
+    f_hi, f_lo = cd.rope_inv_freq_q64(64)
+    pos = np.arange(128, dtype=np.uint32)
+    sin, cos = cd.rope_tables_cordic(pos, f_hi, f_lo)
+    assert sin.shape == (128, 32) and cos.shape == (128, 32)
+    np.testing.assert_allclose(np.asarray(sin) ** 2 + np.asarray(cos) ** 2, 1.0, atol=5e-3)
+    # position 0 -> angle 0
+    np.testing.assert_allclose(np.asarray(sin)[0], 0.0, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(cos)[0], 1.0, atol=2e-4)

@@ -1,0 +1,83 @@
+"""Pallas CORDIC kernel vs NumPy-int64 oracle (bit-exact) and vs
+math truth; shape sweeps incl. padding tails and iteration counts."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.cordic import cordic_sincos_q16
+from repro.core.qformat import Q16_16, to_fixed
+from repro.kernels.cordic import ops
+from repro.kernels.cordic.cordic import cordic_kernel_call
+from repro.kernels.cordic.ref import cordic_sincos_ref
+
+
+SHAPES = [(128,), (4096,), (1000,), (7,), (33, 50), (2, 3, 129)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_kernel_bit_exact_vs_oracle(rng, shape):
+    theta = rng.uniform(-4 * math.pi, 4 * math.pi, size=shape).astype(np.float32)
+    theta_q = np.asarray(to_fixed(theta, Q16_16))
+    got_s, got_c = cordic_kernel_call(theta_q)
+    want_s, want_c = cordic_sincos_ref(theta_q)
+    np.testing.assert_array_equal(np.asarray(got_s), want_s)
+    np.testing.assert_array_equal(np.asarray(got_c), want_c)
+
+
+@pytest.mark.parametrize("iterations", [8, 12, 16])
+def test_iteration_sweep_bit_exact(rng, iterations):
+    theta_q = np.asarray(
+        to_fixed(rng.uniform(-3.2, 3.2, size=(513,)).astype(np.float32), Q16_16)
+    )
+    got_s, got_c = cordic_kernel_call(theta_q, iterations=iterations)
+    want_s, want_c = cordic_sincos_ref(theta_q, iterations=iterations)
+    np.testing.assert_array_equal(np.asarray(got_s), want_s)
+    np.testing.assert_array_equal(np.asarray(got_c), want_c)
+
+
+@pytest.mark.parametrize("block_rows", [8, 64, 256])
+def test_block_shape_sweep(rng, block_rows):
+    theta_q = np.asarray(
+        to_fixed(rng.uniform(-3.2, 3.2, size=(5000,)).astype(np.float32), Q16_16)
+    )
+    got_s, got_c = cordic_kernel_call(theta_q, block_rows=block_rows)
+    want_s, want_c = cordic_sincos_ref(theta_q)
+    np.testing.assert_array_equal(np.asarray(got_s), want_s)
+    np.testing.assert_array_equal(np.asarray(got_c), want_c)
+
+
+def test_kernel_matches_pure_jax_core(rng):
+    """kernels/cordic and core/cordic implement the same contract."""
+    theta_q = np.asarray(
+        to_fixed(rng.uniform(-10, 10, size=(777,)).astype(np.float32), Q16_16)
+    )
+    ks, kc = cordic_kernel_call(theta_q)
+    cs, cc = cordic_sincos_q16(theta_q)
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(cs))
+    np.testing.assert_array_equal(np.asarray(kc), np.asarray(cc))
+
+
+def test_float_boundary_accuracy(rng):
+    theta = rng.uniform(-math.pi, math.pi, size=(2048,)).astype(np.float32)
+    s, c = ops.sincos(theta)
+    np.testing.assert_allclose(np.asarray(s), np.sin(theta), atol=8e-4)
+    np.testing.assert_allclose(np.asarray(c), np.cos(theta), atol=8e-4)
+
+
+def test_rope_tables_long_context():
+    """RoPE tables at 500k-scale positions stay accurate (the fp32
+    failure mode this path exists to fix)."""
+    from repro.core.cordic import rope_inv_freq_q64
+
+    f_hi, f_lo = rope_inv_freq_q64(128, base=10000.0)
+    pos = np.array([0, 1, 524286, 524287], np.uint32)
+    sin, cos = ops.rope_tables(pos, f_hi, f_lo)
+    assert sin.shape == (4, 64)
+    for i, p in enumerate(pos):
+        for j in (1, 7, 31):
+            inv_freq = 10000.0 ** (-2.0 * j / 128)
+            angle = math.fmod(int(p) * inv_freq, 2 * math.pi)
+            assert float(np.asarray(sin)[i, j]) == pytest.approx(math.sin(angle), abs=1e-3)
+            assert float(np.asarray(cos)[i, j]) == pytest.approx(math.cos(angle), abs=1e-3)

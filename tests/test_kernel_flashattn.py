@@ -1,0 +1,90 @@
+"""Flash-attention Pallas kernel vs NumPy softmax oracle: shape/dtype
+sweeps, causal + sliding-window masks, GQA head repetition, and
+agreement with the model's chunked-attention path."""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flashattn import ops
+from repro.kernels.flashattn.flashattn import flash_attention_call
+from repro.kernels.flashattn.ref import attention_ref
+
+
+def rand(rng, shape, dtype=np.float32):
+    return rng.normal(0, 1, shape).astype(dtype)
+
+
+CASES = [
+    # (BH, S, Skv, D, Dv, causal, window)
+    (2, 256, 256, 64, 64, True, None),
+    (1, 512, 512, 128, 128, True, None),
+    (3, 300, 300, 64, 64, True, None),       # padding path
+    (2, 256, 256, 64, 64, True, 64),         # sliding window
+    (2, 128, 128, 64, 32, True, None),       # Dv != D
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_kernel_matches_oracle(rng, case):
+    BH, S, Skv, D, Dv, causal, window = case
+    q = rand(rng, (BH, S, D))
+    k = rand(rng, (BH, Skv, D))
+    v = rand(rng, (BH, Skv, Dv))
+    got = np.asarray(
+        flash_attention_call(
+            q, k, v, scale=1.0 / math.sqrt(D), causal=causal, window=window,
+            bq=128, bk=128,
+        )
+    )
+    want = attention_ref(q, k, v, scale=1.0 / math.sqrt(D), causal=causal, window=window)
+    np.testing.assert_allclose(got, want, atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("blocks", [(64, 128), (128, 256), (256, 256)])
+def test_block_sweep_invariance(rng, blocks):
+    bq, bk = blocks
+    q = rand(rng, (2, 384, 64))
+    k = rand(rng, (2, 384, 64))
+    v = rand(rng, (2, 384, 64))
+    got = np.asarray(
+        flash_attention_call(q, k, v, scale=0.125, causal=True, bq=bq, bk=bk)
+    )
+    want = attention_ref(q, k, v, scale=0.125, causal=True)
+    np.testing.assert_allclose(got, want, atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_dtype_sweep(rng, dtype):
+    q = jnp.asarray(rand(rng, (2, 256, 64)), dtype)
+    k = jnp.asarray(rand(rng, (2, 256, 64)), dtype)
+    v = jnp.asarray(rand(rng, (2, 256, 64)), dtype)
+    got = np.asarray(
+        flash_attention_call(q, k, v, scale=0.125, causal=True), np.float32
+    )
+    want = attention_ref(
+        np.asarray(q, np.float32), np.asarray(k, np.float32), np.asarray(v, np.float32),
+        scale=0.125, causal=True,
+    )
+    tol = 2e-3 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(got, want, atol=tol, rtol=tol)
+
+
+def test_gqa_and_model_path_agreement(rng):
+    """ops.flash_attention == models.attention.chunked_attention on the
+    same GQA inputs (both vs each other and vs the oracle)."""
+    from repro.models.attention import chunked_attention
+
+    B, S, H, KV, D = 2, 256, 8, 2, 64
+    q = jnp.asarray(rand(rng, (B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rand(rng, (B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rand(rng, (B, S, KV, D)), jnp.float32)
+
+    flash = np.asarray(ops.flash_attention(q, k, v, causal=True))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    chunked = np.asarray(
+        chunked_attention(q, k, v, q_positions=positions, causal=True, chunk=128)
+    )
+    np.testing.assert_allclose(flash, chunked, atol=2e-3, rtol=2e-3)

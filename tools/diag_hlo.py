@@ -1,0 +1,66 @@
+"""Diagnostic: top HLO ops by trip-multiplied bytes + top collectives
+for one (arch, shape) cell. Usage:
+  PYTHONPATH=src python tools/diag_hlo.py <arch> <shape> [n]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, collections
+from repro.launch.mesh import make_mesh_by_name
+from repro.launch.steps import build_cell
+from repro.launch.hlo_analysis import (_parse_computations, _shape_bytes, _op_bytes,
+    _TRIP_RE, _CALL_ATTR_RE, _COND_ATTR_RE, COLLECTIVE_OPS)
+
+arch, shape = sys.argv[1], sys.argv[2]
+topn = int(sys.argv[3]) if len(sys.argv) > 3 else 12
+mesh = make_mesh_by_name("single")
+jitted, args, meta = build_cell(arch, shape, mesh, "precise")
+with mesh:
+    compiled = jitted.lower(*args).compile()
+print("memory_analysis:", {f: getattr(compiled.memory_analysis(), f, None)
+      for f in ("temp_size_in_bytes", "argument_size_in_bytes")})
+comps, entry = _parse_computations(compiled.as_text())
+callgraph = collections.defaultdict(list)
+for cname, comp in comps.items():
+    for op in comp.ops:
+        if op.opcode == 'while':
+            t = 1
+            mt = _TRIP_RE.search(op.rest)
+            if mt: t = int(mt.group(1))
+            for rx in (_CALL_ATTR_RE, _COND_ATTR_RE):
+                mm = rx.search(op.rest)
+                if mm: callgraph[cname].append((mm.group(1), t))
+        elif op.opcode in ('call','conditional'):
+            for callee in _CALL_ATTR_RE.findall(op.rest):
+                callgraph[cname].append((callee, 1))
+mults = collections.defaultdict(int)
+def walk(name, m):
+    mults[name] += m
+    for callee, t in callgraph.get(name, []):
+        walk(callee, m*t)
+walk(entry, 1)
+FREE = {"parameter","get-tuple-element","tuple","constant","bitcast","after-all","iota","partition-id","replica-id"}
+rows_b, rows_c, big_tensors = [], [], []
+for cname, comp in comps.items():
+    m = mults.get(cname, 0)
+    if m == 0: continue
+    for op in comp.ops:
+        base = op.opcode.replace('-start','')
+        if base in COLLECTIVE_OPS:
+            rows_c.append((_shape_bytes(op.shape)*m, base, op.shape[:70], m, cname[:30]))
+        elif op.opcode not in FREE and not op.opcode.endswith('-done') and op.opcode not in ('while','call','conditional'):
+            rows_b.append((_op_bytes(op, comp)*m, op.opcode, op.shape[:70], m, cname[:30]))
+        sb = _shape_bytes(op.shape)
+        if sb > 2**28:
+            big_tensors.append((sb, op.opcode, op.shape[:75]))
+rows_b.sort(reverse=True); rows_c.sort(reverse=True); big_tensors.sort(reverse=True)
+print("TOP BYTES (trip-multiplied):")
+for r in rows_b[:topn]: print(f"  {r[0]:.3e} {r[1]:18s} {r[2]:70s} x{r[3]} {r[4]}")
+print("TOP COLLECTIVES:")
+for r in rows_c[:topn]: print(f"  {r[0]:.3e} {r[1]:16s} {r[2]:70s} x{r[3]} {r[4]}")
+print("BIGGEST SINGLE TENSORS:")
+seen = set()
+for sb, oc, sh in big_tensors:
+    if sh in seen: continue
+    seen.add(sh)
+    print(f"  {sb/2**30:7.2f} GiB {oc:16s} {sh}")
+    if len(seen) > 9: break

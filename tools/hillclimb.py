@@ -1,0 +1,40 @@
+"""Run the three formal hillclimb variants + bonus cells."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses, json, sys
+from pathlib import Path
+sys.path.insert(0, "src")
+from repro.launch import dryrun
+from repro.launch import steps
+import repro.configs as configs
+
+OUT = Path("benchmarks/results/dryrun")
+
+def save(rec, name):
+    (OUT / name).write_text(json.dumps(rec, indent=2, default=str))
+    print("->", name)
+
+# H1: deepseek fast (int8) train
+rec = dryrun.run_cell("deepseek_7b", "train_4k", "single", mode="fast")
+save(rec, "deepseek_7b-train_4k-single-fast.json")
+
+# H2: command-r pure FSDP
+rec = dryrun.run_cell("command_r_35b", "train_4k", "single", sharding="pure_fsdp")
+save(rec, "command_r_35b-train_4k-single-precise-pure_fsdp.json")
+
+# H3: mamba2 SSD chunk sweep (config override via steps.get_config patch)
+_orig = steps.get_config
+for chunk in (64, 256):
+    def patched(name, _c=chunk):
+        cfg = _orig(name)
+        if cfg.ssm is not None:
+            cfg = dataclasses.replace(cfg, ssm=dataclasses.replace(cfg.ssm, chunk=_c))
+        return cfg
+    steps.get_config = patched
+    rec = dryrun.run_cell("mamba2_1_3b", "train_4k", "single")
+    save(rec, f"mamba2_1_3b-train_4k-single-precise-chunk{chunk}.json")
+steps.get_config = _orig
+
+# bonus: mixtral fast-mode train (paper's fast path on the biggest MoE)
+rec = dryrun.run_cell("mixtral_8x22b", "train_4k", "single", mode="fast")
+save(rec, "mixtral_8x22b-train_4k-single-fast.json")
