@@ -56,6 +56,58 @@ def bench_trig():
     return rows
 
 
+def bench_universal_family():
+    """Beyond the paper's Table 1: the universal-CORDIC transcendental
+    family (Walther modes) vs the jnp float path — wall clock plus the
+    documented error-bound check for each op (core/cordic.py docstring)."""
+    from repro.core import cordic as cd
+    from repro.core.qformat import Q16_16, to_fixed
+
+    rng = np.random.default_rng(42)
+    n = 65536
+    rows = []
+
+    y = rng.uniform(-100, 100, n).astype(np.float32)
+    x = rng.uniform(-100, 100, n).astype(np.float32)
+    yq, xq = to_fixed(y, Q16_16), to_fixed(x, Q16_16)
+    t_q = _bench(lambda a, b: cd.atan2_q16(a, b), yq, xq)
+    t_f = _bench(lambda a, b: jnp.arctan2(a, b), jnp.asarray(y), jnp.asarray(x))
+    err = float(np.max(np.abs(
+        np.asarray(cd.atan2_q16(yq, xq), np.int64) / 65536.0
+        - np.arctan2(np.asarray(yq, np.int64) / 65536.0, np.asarray(xq, np.int64) / 65536.0)
+    )))
+    rows.append(("univ.atan2_64k", t_q, f"jnp_us={t_f:.1f},max_err={err:.2e} (bound 1e-4)"))
+
+    # (op, fast, precise, inputs, relative?, documented bound) — sqrt and
+    # exp have RELATIVE bounds, so their reported error is normalized by
+    # the oracle; the rest report max absolute error.
+    unary = [
+        ("sqrt", cd.sqrt_q16, jnp.sqrt, rng.uniform(0.01, 30000.0, n), True, "rel 3e-5"),
+        ("exp", cd.exp_q16, jnp.exp, rng.uniform(-10.0, 10.0, n), True, "rel 6e-5"),
+        ("log", cd.log_q16, jnp.log, rng.uniform(0.01, 30000.0, n), False, "abs 8e-5"),
+        ("tanh", cd.tanh_q16, jnp.tanh, rng.uniform(-8.0, 8.0, n), False, "abs 6e-5"),
+        ("sigmoid", cd.sigmoid_q16, jax.nn.sigmoid, rng.uniform(-8.0, 8.0, n), False, "abs 5e-5"),
+    ]
+    for name, q_fn, f_fn, vals, relative, bound in unary:
+        vals = vals.astype(np.float32)
+        vq = to_fixed(vals, Q16_16)
+        t_q = _bench(q_fn, vq)
+        t_f = _bench(f_fn, jnp.asarray(vals))
+        exact = {"sqrt": np.sqrt, "exp": np.exp, "log": np.log, "tanh": np.tanh,
+                 "sigmoid": lambda v: 1 / (1 + np.exp(-v))}[name](
+            np.asarray(vq, np.int64) / 65536.0)
+        err = np.abs(np.asarray(q_fn(vq), np.int64) / 65536.0 - exact)
+        if relative:
+            # subtract the 1-ulp output-quantization floor before
+            # normalizing (the documented bound is 1 ulp + rel * value)
+            err = float(np.max(np.maximum(err - 2.0 ** -16, 0.0) / np.abs(exact)))
+        else:
+            err = float(np.max(err))
+        kind = "max_rel_err" if relative else "max_err"
+        rows.append((f"univ.{name}_64k", t_q, f"jnp_us={t_f:.1f},{kind}={err:.2e} (bound {bound})"))
+    return rows
+
+
 def bench_scalar_mul():
     """Paper Table 1 row mul: Q16.16 vs f32 multiply on vectors, plus
     the Eq. 6 error bound check."""
@@ -150,8 +202,9 @@ def bench_deferred_error():
              f"per_element={e_per:.3e},deferred={e_def:.3e},ratio={e_per / max(e_def, 1e-12):.1f}x")]
 
 
-ALL = [bench_trig, bench_scalar_mul, bench_matmul_crossover, bench_switch,
-       bench_footprint, bench_deferred_error]
+ALL = [bench_trig, bench_universal_family, bench_scalar_mul,
+       bench_matmul_crossover, bench_switch, bench_footprint,
+       bench_deferred_error]
 
 
 def run():

@@ -1,7 +1,7 @@
 """Benchmark harness entrypoint: one section per paper table/figure +
 the roofline cell summary.  Prints ``name,us_per_call,derived`` CSV.
 
-Run:  PYTHONPATH=src python -m benchmarks.run [--section trig|mul|matmul|switch|roofline|all]
+Run:  PYTHONPATH=src python -m benchmarks.run [--section trig|universal|mul|matmul|switch|roofline|all]
 """
 
 import argparse
@@ -21,6 +21,7 @@ def main() -> None:
 
     sections = {
         "trig": bench_paper_tables.bench_trig,
+        "universal": bench_paper_tables.bench_universal_family,
         "mul": bench_paper_tables.bench_scalar_mul,
         "matmul": bench_paper_tables.bench_matmul_crossover,
         "switch": bench_paper_tables.bench_switch,

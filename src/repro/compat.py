@@ -1,0 +1,32 @@
+"""JAX version compatibility shims.
+
+The repo targets the current JAX API surface but must also run on
+0.4.x-era releases (the pinned CI/container toolchain).  Everything
+version-sensitive is funneled through here:
+
+* ``CompilerParams`` — ``pltpu.TPUCompilerParams`` was renamed to
+  ``pltpu.CompilerParams``.
+* ``shard_map`` — promoted from ``jax.experimental.shard_map`` to
+  ``jax.shard_map``, with ``check_rep`` renamed to ``check_vma``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.experimental.pallas.tpu as pltpu
+
+__all__ = ["CompilerParams", "shard_map"]
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+        return _legacy_shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma, **kw,
+        )

@@ -13,12 +13,27 @@ from repro.core.barrier import TwoPhaseBarrier, multihost_sync
 from repro.core.cordic import (
     ATAN_TABLE_Q16,
     CORDIC_K_INV_Q16,
+    HYPER_STAGES,
+    atan2_q16,
+    cordic_atan2,
+    cordic_exp,
+    cordic_log,
     cordic_rotate_q16,
+    cordic_sigmoid,
     cordic_sincos,
     cordic_sincos_q16,
+    cordic_sqrt,
+    cordic_tanh,
     exact_rope_phase_q16,
+    exp_q16,
+    hyper_gain_inverse,
+    hyperbolic_schedule,
+    log_q16,
     rope_inv_freq_q64,
     rope_tables_cordic,
+    sigmoid_q16,
+    sqrt_q16,
+    tanh_q16,
 )
 from repro.core.linalg import (
     derive_tile_size,

@@ -14,6 +14,13 @@ Policy (hysteresis state machine):
                       (c) loss regression > regress_tol over the window.
   PRECISE -> FAST after `stable_steps` consecutive healthy steps,
                       with a cooldown to prevent flapping.
+
+Non-finite telemetry is a hard safety signal: it forces the fallback
+even inside the cooldown window (a NaN loss in FAST mode means every
+further FAST step is wasted — flapping protection must not delay the
+rescue).  Spike/regression fallbacks and all promotions still honor
+the cooldown, and any unhealthy step resets the ``stable_steps``
+promotion counter.
 """
 
 from __future__ import annotations
@@ -83,6 +90,8 @@ class PrecisionArbiter:
         telemetry window (they would poison the medians)."""
         reason = self._unhealthy(loss, grad_norm)
         cooled = step - self._last_switch_step >= self.config.cooldown_steps
+        # non-finite loss is a hard failure: never wait out the cooldown
+        forced = reason == "non-finite"
 
         if reason is None:
             self._losses.append(loss)
@@ -91,7 +100,7 @@ class PrecisionArbiter:
         else:
             self._stable = 0
 
-        if self.mode is Mode.FAST and reason is not None and cooled:
+        if self.mode is Mode.FAST and reason is not None and (cooled or forced):
             self.mode = Mode.PRECISE
             self._last_switch_step = step
             self._stable = 0

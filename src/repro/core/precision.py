@@ -40,9 +40,15 @@ class Mode(str, enum.Enum):
     PRECISE = "precise"    # IEEE 754 path (f^F)
 
 
-#: The paper's operation set F (Eq. 19).  The framework registers more
-#: (train_step, prefill_step, serve_step), but these six always exist.
-OP_SET = ("mul", "add", "sub", "sin", "cos", "matmul")
+#: The paper's operation set F (Eq. 19) — six ops — extended with the
+#: universal-CORDIC transcendental family (Walther modes: circular and
+#: hyperbolic vectoring, hyperbolic rotation, linear division).  The
+#: framework registers more (train_step, prefill_step, serve_step), but
+#: these always exist.
+OP_SET = (
+    "mul", "add", "sub", "sin", "cos", "matmul",
+    "atan2", "sqrt", "exp", "log", "tanh", "sigmoid",
+)
 
 
 class PrecisionContext:
@@ -120,6 +126,14 @@ class MathEngine:
         self.register("sin", fast=lambda t: cordic.cordic_sincos(t)[0], precise=jnp.sin)
         self.register("cos", fast=lambda t: cordic.cordic_sincos(t)[1], precise=jnp.cos)
         self.register("matmul", fast=linalg.qmatmul_deferred, precise=linalg.matmul_float)
+        # universal-CORDIC transcendental family (float boundaries on the
+        # FAST path, same call signature in both modes — R1)
+        self.register("atan2", fast=cordic.cordic_atan2, precise=jnp.arctan2)
+        self.register("sqrt", fast=cordic.cordic_sqrt, precise=jnp.sqrt)
+        self.register("exp", fast=cordic.cordic_exp, precise=jnp.exp)
+        self.register("log", fast=cordic.cordic_log, precise=jnp.log)
+        self.register("tanh", fast=cordic.cordic_tanh, precise=jnp.tanh)
+        self.register("sigmoid", fast=cordic.cordic_sigmoid, precise=jax.nn.sigmoid)
 
     def register(self, name: str, *, fast: Callable, precise: Callable) -> None:
         self._impls[name] = {Mode.FAST: fast, Mode.PRECISE: precise}

@@ -18,8 +18,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
-
 from repro.core.cordic import (
     HALF_PI_Q16,
     PI_Q16,
@@ -27,6 +25,7 @@ from repro.core.cordic import (
     atan_table,
     gain_inverse,
 )
+from repro.compat import CompilerParams
 
 __all__ = ["cordic_kernel_call", "LANE", "DEFAULT_BLOCK_ROWS"]
 
@@ -95,7 +94,7 @@ def cordic_kernel_call(
             jax.ShapeDtypeStruct((rows, LANE), jnp.int32),
             jax.ShapeDtypeStruct((rows, LANE), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(flat)
     return (

@@ -1,4 +1,5 @@
-"""Public ops for the CORDIC kernel: float boundaries + RoPE tables."""
+"""Public ops for the CORDIC kernels: float boundaries + RoPE tables +
+the universal (Walther-mode) transcendental family."""
 
 from __future__ import annotations
 
@@ -7,11 +8,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.cordic import exact_rope_phase_q16
+from repro.core.cordic import HYPER_STAGES, exact_rope_phase_q16
 from repro.core.qformat import Q16_16, from_fixed, to_fixed
 from repro.kernels.cordic.cordic import cordic_kernel_call
+from repro.kernels.cordic.universal import atan2_kernel_call, universal_kernel_call
 
-__all__ = ["sincos", "rope_tables"]
+__all__ = ["sincos", "rope_tables", "atan2", "unary_op"]
 
 
 @functools.partial(jax.jit, static_argnames=("iterations", "interpret"))
@@ -34,3 +36,22 @@ def rope_tables(
         from_fixed(sin_q, Q16_16, dtype=dtype),
         from_fixed(cos_q, Q16_16, dtype=dtype),
     )
+
+
+@functools.partial(jax.jit, static_argnames=("iterations", "interpret"))
+def atan2(y, x, iterations: int = 16, interpret: bool = True):
+    """float (y, x) -> atan2 float32 through the universal Pallas kernel."""
+    out_q = atan2_kernel_call(
+        to_fixed(y, Q16_16), to_fixed(x, Q16_16),
+        iterations=iterations, interpret=interpret,
+    )
+    return from_fixed(out_q, Q16_16)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "stages", "interpret"))
+def unary_op(w, op: str, stages: int = HYPER_STAGES, interpret: bool = True):
+    """float -> float universal unary op (sqrt/exp/log/tanh/sigmoid)."""
+    out_q = universal_kernel_call(
+        to_fixed(w, Q16_16), op=op, stages=stages, interpret=interpret
+    )
+    return from_fixed(out_q, Q16_16)

@@ -1,11 +1,37 @@
-"""Pure NumPy-int64 oracle for the CORDIC Pallas kernel — bit-exact
-contract (same range reduction, fold, shift-add recurrence)."""
+"""Pure NumPy-int64 oracles for the CORDIC Pallas kernels — bit-exact
+contracts (same range reductions, folds, shift-add recurrences).
+
+``cordic_sincos_ref`` pins the circular-rotation kernel; the
+``*_ref`` universal ops below pin ``kernels/cordic/universal.py`` and
+``repro.core.cordic``'s universal bodies.  Every intermediate stays in
+int32 range by construction, so int64 arithmetic here equals the
+paired-limb int32 datapath bit for bit.
+"""
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.cordic import HALF_PI_Q16, PI_Q16, TWO_PI_Q16, atan_table, gain_inverse
+from repro.core.cordic import (
+    EXP_FLUSH_LO_Q16,
+    EXP_SAT_HI_Q16,
+    HALF_PI_Q16,
+    HYPER_STAGES,
+    INV_LN2_Q16,
+    LN2_Q16,
+    PI_Q16,
+    TWO_PI_Q16,
+    atan_table,
+    atanh_table,
+    gain_inverse,
+    hyper_gain_inverse,
+    hyperbolic_schedule,
+)
+
+_ONE = 1 << 16
+_HFRAC = 29
+_RAW_MAX = (1 << 31) - 1
+_RAW_MIN = -(1 << 31)
 
 
 def cordic_sincos_ref(theta_q, iterations: int = 16):
@@ -35,3 +61,196 @@ def cordic_sincos_ref(theta_q, iterations: int = 16):
     cos_q = np.where(negate, -x, x)
     sin_q = np.where(negate, -y, y)
     return sin_q.astype(np.int32), cos_q.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# universal CORDIC oracles (mirror repro.core.cordic bodies, int64)
+# ---------------------------------------------------------------------------
+
+
+def _clamp_raw(v):
+    return np.maximum(np.asarray(v, np.int64), _RAW_MIN + 1)
+
+
+def _ilog2(v):
+    v = np.asarray(v, np.int64).copy()
+    n = np.zeros_like(v)
+    for s in (16, 8, 4, 2, 1):
+        gt = v >= (1 << s)
+        n = n + np.where(gt, s, 0)
+        v = np.where(gt, v >> s, v)
+    return n
+
+
+def _shift_signed(v, s):
+    return (v >> np.maximum(s, 0)) << np.maximum(-s, 0)
+
+
+def _round_shift_right(v, s):
+    half = np.where(s > 0, np.int64(1) << np.maximum(s - 1, 0), 0)
+    return (v + half) >> s
+
+
+def _hyper_vectoring(x, y, z, stages):
+    sched = hyperbolic_schedule(stages)
+    table = atanh_table(sched, _HFRAC)
+    for j, i in enumerate(sched):
+        neg = y < 0
+        xs = x >> i
+        ys = y >> i
+        t = int(table[j])
+        x, y, z = (
+            np.where(neg, x + ys, x - ys),
+            np.where(neg, y + xs, y - xs),
+            np.where(neg, z - t, z + t),
+        )
+    return x, y, z
+
+
+def _hyper_rotation(x, y, z, stages):
+    sched = hyperbolic_schedule(stages)
+    table = atanh_table(sched, _HFRAC)
+    for j, i in enumerate(sched):
+        pos = z >= 0
+        xs = x >> i
+        ys = y >> i
+        t = int(table[j])
+        x, y, z = (
+            np.where(pos, x + ys, x - ys),
+            np.where(pos, y + xs, y - xs),
+            np.where(pos, z - t, z + t),
+        )
+    return x, y, z
+
+
+def _linear_div_q16(num, den, iterations=17):
+    num = np.asarray(num, np.int64)
+    den = np.asarray(den, np.int64)
+    s = _HFRAC - _ilog2(np.maximum(den, 1))
+    x = _shift_signed(den, -s)
+    y = _shift_signed(num, -s)
+    z = np.zeros_like(x)
+    for i in range(iterations):
+        pos = y >= 0
+        xs = x >> i
+        t = _ONE >> i
+        y = np.where(pos, y - xs, y + xs)
+        z = np.where(pos, z + t, z - t)
+    return z
+
+
+def atan2_ref(y_q, x_q, iterations=16):
+    y0 = _clamp_raw(y_q)
+    x0 = _clamp_raw(x_q)
+    table = atan_table(iterations)
+
+    neg_x = x0 < 0
+    x1 = np.where(neg_x, -x0, x0)
+    y1 = np.where(neg_x, -y0, y0)
+
+    m = np.maximum(np.abs(x1), np.abs(y1))
+    s = 28 - _ilog2(np.maximum(m, 1))
+    x1 = _shift_signed(x1, -s)
+    y1 = _shift_signed(y1, -s)
+
+    z = np.zeros_like(x1)
+    for i in range(iterations):
+        neg = y1 < 0
+        xs = x1 >> i
+        ys = y1 >> i
+        t = int(table[i])
+        x1, y1, z = (
+            np.where(neg, x1 - ys, x1 + ys),
+            np.where(neg, y1 + xs, y1 - xs),
+            np.where(neg, z - t, z + t),
+        )
+
+    half_turn = np.where(y0 < 0, -PI_Q16, PI_Q16)
+    out = np.where(neg_x, z + half_turn, z)
+    return np.where((x0 == 0) & (y0 == 0), 0, out).astype(np.int32)
+
+
+def sqrt_ref(w_q, stages=HYPER_STAGES):
+    w = _clamp_raw(w_q)
+    k_h_inv = hyper_gain_inverse(hyperbolic_schedule(stages), _HFRAC)
+
+    b = _ilog2(np.maximum(w, 1))
+    s0 = b - 16
+    s = np.where((s0 & 1) == 0, s0, s0 + 1)
+    u = _shift_signed(w, s)
+    u29 = u << (_HFRAC - 16)
+    quarter = 1 << (_HFRAC - 2)
+
+    x, _, _ = _hyper_vectoring(u29 + quarter, u29 - quarter, np.zeros_like(u29), stages)
+    r29 = (x * k_h_inv + (1 << (_HFRAC - 1))) >> _HFRAC  # q_mul, round-to-nearest
+    out = _round_shift_right(r29, (_HFRAC - 16) - (s >> 1))
+    return np.where(w <= 0, 0, out).astype(np.int32)
+
+
+def exp_ref(t_q, stages=HYPER_STAGES):
+    t = np.asarray(t_q, np.int64)
+    k_h_inv = hyper_gain_inverse(hyperbolic_schedule(stages), _HFRAC)
+
+    tc = np.clip(t, EXP_FLUSH_LO_Q16 - _ONE, EXP_SAT_HI_Q16 + _ONE)
+    k = (((tc * INV_LN2_Q16 + (1 << 15)) >> 16) + (1 << 15)) >> 16
+    r = tc - k * LN2_Q16
+
+    x, y, _ = _hyper_rotation(
+        np.full_like(t, k_h_inv), np.zeros_like(t), r << (_HFRAC - 16), stages
+    )
+    er = x + y
+
+    sh = (_HFRAC - 16) - k
+    rs = _round_shift_right(er, np.maximum(sh, 0))
+    sl = np.maximum(-sh, 0)
+    fits = rs <= (_RAW_MAX >> sl)
+    out = np.where(fits, rs << sl, _RAW_MAX)
+    out = np.where(t >= EXP_SAT_HI_Q16, _RAW_MAX, out)
+    return np.where(t <= EXP_FLUSH_LO_Q16, 0, out).astype(np.int32)
+
+
+def log_ref(w_q, stages=HYPER_STAGES):
+    w = _clamp_raw(w_q)
+    b = _ilog2(np.maximum(w, 1))
+    k = b - 16
+    u = _shift_signed(w, k)
+    u29 = u << (_HFRAC - 16)
+    one29 = 1 << _HFRAC
+
+    _, _, z = _hyper_vectoring(u29 + one29, u29 - one29, np.zeros_like(u29), stages)
+    lnu = (z + (1 << (_HFRAC - 18))) >> (_HFRAC - 17)
+    return np.where(w <= 0, _RAW_MIN, lnu + k * LN2_Q16).astype(np.int32)
+
+
+def tanh_ref(t_q, stages=HYPER_STAGES):
+    t = _clamp_raw(t_q)
+    at = np.abs(t)
+    k_h_inv = hyper_gain_inverse(hyperbolic_schedule(stages), _HFRAC)
+
+    ts = np.minimum(at, _ONE)
+    x, y, _ = _hyper_rotation(
+        np.full_like(t, k_h_inv), np.zeros_like(t), ts << (_HFRAC - 16), stages
+    )
+    near = _linear_div_q16(y >> (_HFRAC - 16), np.maximum(x >> (_HFRAC - 16), 1))
+
+    a2 = np.minimum(at, -EXP_FLUSH_LO_Q16)
+    e = exp_ref(-(a2 << 1), stages).astype(np.int64)
+    far = _linear_div_q16(_ONE - e, _ONE + e)
+
+    mag = np.minimum(np.where(at <= _ONE, near, far), _ONE)
+    return np.where(t < 0, -mag, mag).astype(np.int32)
+
+
+def sigmoid_ref(t_q, stages=HYPER_STAGES):
+    t = _clamp_raw(t_q)
+    th = tanh_ref(t >> 1, stages).astype(np.int64)
+    return ((th + _ONE + 1) >> 1).astype(np.int32)
+
+
+UNARY_REFS = {
+    "sqrt": sqrt_ref,
+    "exp": exp_ref,
+    "log": log_ref,
+    "tanh": tanh_ref,
+    "sigmoid": sigmoid_ref,
+}

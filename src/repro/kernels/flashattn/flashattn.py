@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.compat import CompilerParams
+
 __all__ = ["flash_attention_call", "DEFAULT_BQ", "DEFAULT_BK"]
 
 DEFAULT_BQ = 256
@@ -129,7 +131,7 @@ def flash_attention_call(
             pltpu.VMEM((bq_, 1), jnp.float32),
             pltpu.VMEM((bq_, Dv), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

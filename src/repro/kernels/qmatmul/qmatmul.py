@@ -34,6 +34,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.compat import CompilerParams
+
 __all__ = ["qmatmul_kernel_call", "DEFAULT_BM", "DEFAULT_BN", "DEFAULT_BK"]
 
 # Derived from a ~2.5 MiB single-buffer working set (x2 for pipeline
@@ -142,7 +144,7 @@ def qmatmul_kernel_call(
         out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,131 @@
+"""Property-based-testing facade: real hypothesis when installed, a
+vendored fixed-seed fallback otherwise.
+
+The tier-1 suite must collect and pass in environments without
+``hypothesis`` (minimal CI runners, air-gapped hosts), so test modules
+import ``given`` / ``settings`` / ``strategies`` from here instead of
+from ``hypothesis`` directly.  When hypothesis is importable, this
+module is a pure re-export and behavior is identical.  Otherwise a
+small shim drives each property with a deterministic example sweep:
+the declared boundary values of every strategy first (paired
+positionally, then a shuffled pairing so min/max cross-combinations
+appear), then seeded-random draws up to ``max_examples``.
+
+Only the subset this suite uses is implemented: ``strategies.integers``,
+``strategies.floats``, ``strategies.booleans``, ``@given`` over
+positional strategies, ``@settings(max_examples=...)``, and the
+``settings.register_profile`` / ``settings.load_profile`` class API.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    _SEED = 0x51DE  # fixed: the fallback is fully deterministic
+
+    class _Strategy:
+        """A value source: explicit boundary cases + seeded random draws."""
+
+        def __init__(self, boundaries, draw):
+            self.boundaries = list(boundaries)
+            self._draw = draw
+
+        def example(self, k, rng):
+            if k < len(self.boundaries):
+                return self.boundaries[k]
+            return self._draw(rng)
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value, max_value):
+            bounds = [min_value, max_value]
+            for v in (0, 1, -1, min_value + 1, max_value - 1):
+                if min_value <= v <= max_value and v not in bounds:
+                    bounds.append(v)
+            span = max_value - min_value
+
+            def draw(rng):
+                return int(min_value + rng.integers(0, span + 1))
+
+            return _Strategy(bounds, draw)
+
+        @staticmethod
+        def floats(min_value=None, max_value=None, allow_nan=False, width=64):
+            lo = -1e9 if min_value is None else float(min_value)
+            hi = 1e9 if max_value is None else float(max_value)
+            cast = (lambda v: float(np.float32(v))) if width == 32 else float
+            bounds = [cast(lo), cast(hi)]
+            for v in (0.0, lo / 2, hi / 2, lo + (hi - lo) * 1e-6):
+                v = cast(v)
+                if lo <= v <= hi and v not in bounds:
+                    bounds.append(v)
+
+            def draw(rng):
+                return cast(lo + (hi - lo) * rng.random())
+
+            return _Strategy(bounds, draw)
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True], lambda rng: bool(rng.integers(0, 2)))
+
+    strategies = _StrategiesModule()
+
+    class settings:  # noqa: N801 - mirrors hypothesis' API
+        _profiles: dict = {}
+        _current: dict = {"max_examples": 30}
+
+        def __init__(self, **kw):
+            self._kw = kw
+
+        def __call__(self, fn):
+            fn._pbt_max_examples = self._kw.get(
+                "max_examples", self._current.get("max_examples", 30)
+            )
+            return fn
+
+        @classmethod
+        def register_profile(cls, name, **kw):
+            cls._profiles[name] = kw
+
+        @classmethod
+        def load_profile(cls, name):
+            cls._current = {**cls._current, **cls._profiles.get(name, {})}
+
+    def given(*strats):
+        """Drive the property over boundary combinations then random draws."""
+
+        def deco(fn):
+            max_ex = getattr(
+                fn, "_pbt_max_examples", settings._current.get("max_examples", 30)
+            )
+
+            def runner():
+                rng = np.random.default_rng(_SEED)
+                n_bound = max(len(s.boundaries) for s in strats) if strats else 0
+                # pass 1: boundaries paired positionally (min/min, max/max, ...)
+                for k in range(min(n_bound, max_ex)):
+                    fn(*(s.example(k, rng) for s in strats))
+                # pass 2: shuffled boundary pairings (min/max cross-combos)
+                for _ in range(min(n_bound, max(0, max_ex - n_bound))):
+                    fn(*(s.boundaries[rng.integers(0, len(s.boundaries))] for s in strats))
+                # pass 3: seeded random draws
+                for _ in range(max(0, max_ex - 2 * n_bound)):
+                    fn(*(s._draw(rng) for s in strats))
+
+            # plain attribute copies only: functools.wraps would set
+            # __wrapped__ and pytest would then see the original
+            # signature and treat strategy params as fixtures
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+
+        return deco

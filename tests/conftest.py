@@ -4,11 +4,15 @@ IMPORTANT: no XLA_FLAGS / device-count overrides here — smoke tests and
 benches must see the real single CPU device.  Multi-device sharding
 tests spawn subprocesses with their own XLA_FLAGS (see
 tests/test_dryrun.py).
+
+Property-based tests go through ``tests/_pbt.py``, which re-exports
+hypothesis when installed and a deterministic fixed-seed shim when not
+— the tier-1 suite must collect and pass either way.
 """
 
 import numpy as np
 import pytest
-from hypothesis import settings
+from _pbt import settings
 
 # Keep hypothesis deadlines off: jit compilation on first example would
 # blow any wall-clock deadline and has nothing to do with correctness.

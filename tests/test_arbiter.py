@@ -1,0 +1,133 @@
+"""PrecisionArbiter hysteresis edge cases: cooldown vs flapping,
+non-finite override, and promotion-counter resets.
+
+Complements the happy-path policy tests in test_precision.py — these
+pin the corner semantics the training loop relies on when numerics go
+bad *during* a cooldown window.
+"""
+
+import math
+
+from repro.core import ArbiterConfig, Mode, PrecisionArbiter
+
+
+def warm(arb, steps, start=0, loss=1.0, gnorm=1.0):
+    """Feed healthy telemetry so medians exist; returns the next step."""
+    for s in range(start, start + steps):
+        arb.observe(s, loss=loss, grad_norm=gnorm)
+    return start + steps
+
+
+# ---------------------------------------------------------------------------
+# cooldown suppresses flapping
+# ---------------------------------------------------------------------------
+
+
+def test_cooldown_suppresses_spike_fallback_flapping():
+    """After one FAST->PRECISE->FAST cycle, an immediate second spike
+    inside the cooldown must NOT trip another fallback."""
+    cfg = ArbiterConfig(spike_factor=4.0, stable_steps=2, cooldown_steps=10)
+    arb = PrecisionArbiter(cfg)
+    step = warm(arb, 16)
+
+    assert arb.observe(step, loss=1.0, grad_norm=100.0) is Mode.PRECISE
+    step += 1
+    # ride out cooldown + stability -> promotion back to FAST
+    while arb.mode is Mode.PRECISE:
+        arb.observe(step, loss=1.0, grad_norm=1.0)
+        step += 1
+    promoted_at = step - 1
+
+    # a spike immediately after the promotion is within the cooldown:
+    # the arbiter must hold FAST (no flap), and only fall back once
+    # the cooldown has elapsed
+    for s in range(step, promoted_at + cfg.cooldown_steps):
+        assert arb.observe(s, loss=1.0, grad_norm=100.0) is None, s
+        assert arb.mode is Mode.FAST
+    assert arb.observe(promoted_at + cfg.cooldown_steps, loss=1.0, grad_norm=100.0) is Mode.PRECISE
+
+
+def test_cooldown_blocks_promotion():
+    """stable_steps shorter than the cooldown: promotion waits for BOTH."""
+    cfg = ArbiterConfig(spike_factor=2.0, stable_steps=1, cooldown_steps=40)
+    arb = PrecisionArbiter(cfg)
+    step = warm(arb, 16)
+    assert arb.observe(step, loss=1.0, grad_norm=50.0) is Mode.PRECISE
+    switch_step = step
+    for s in range(step + 1, switch_step + cfg.cooldown_steps):
+        assert arb.observe(s, loss=1.0, grad_norm=1.0) is None
+        assert arb.mode is Mode.PRECISE
+    assert arb.observe(switch_step + cfg.cooldown_steps, loss=1.0, grad_norm=1.0) is Mode.FAST
+
+
+# ---------------------------------------------------------------------------
+# non-finite loss overrides the cooldown
+# ---------------------------------------------------------------------------
+
+
+def test_nonfinite_forces_precise_inside_cooldown():
+    cfg = ArbiterConfig(spike_factor=4.0, stable_steps=1, cooldown_steps=100)
+    arb = PrecisionArbiter(cfg)
+    step = warm(arb, 16)
+    arb._last_switch_step = step - 1  # mid-cooldown by construction
+
+    # a grad spike is suppressed by the cooldown...
+    assert arb.observe(step, loss=1.0, grad_norm=500.0) is None
+    assert arb.mode is Mode.FAST
+    # ...but a NaN/inf loss is not
+    assert arb.observe(step + 1, loss=float("nan"), grad_norm=1.0) is Mode.PRECISE
+    assert arb.mode is Mode.PRECISE
+    assert arb.decisions[-1][2] == "non-finite"
+
+
+def test_nonfinite_inf_also_forces():
+    cfg = ArbiterConfig(cooldown_steps=10**6)
+    arb = PrecisionArbiter(cfg)
+    step = warm(arb, 10)
+    arb._last_switch_step = step - 1
+    assert arb.observe(step, loss=math.inf, grad_norm=1.0) is Mode.PRECISE
+
+
+def test_nonfinite_not_added_to_telemetry_window():
+    """NaN steps must not poison the running medians."""
+    arb = PrecisionArbiter(ArbiterConfig(cooldown_steps=0))
+    step = warm(arb, 12)
+    before = list(arb._losses)
+    arb.observe(step, loss=float("nan"), grad_norm=1.0)
+    assert list(arb._losses) == before
+
+
+# ---------------------------------------------------------------------------
+# stable_steps promotion counter resets on a new spike
+# ---------------------------------------------------------------------------
+
+
+def test_promotion_counter_resets_on_new_spike():
+    cfg = ArbiterConfig(spike_factor=4.0, stable_steps=8, cooldown_steps=0)
+    arb = PrecisionArbiter(cfg)
+    step = warm(arb, 16)
+    assert arb.observe(step, loss=1.0, grad_norm=100.0) is Mode.PRECISE
+    step += 1
+
+    # 6 healthy steps (not yet stable_steps=8) ...
+    for _ in range(6):
+        assert arb.observe(step, loss=1.0, grad_norm=1.0) is None
+        step += 1
+    # ... then a fresh spike: the counter must reset to zero
+    assert arb.observe(step, loss=1.0, grad_norm=200.0) is None
+    assert arb._stable == 0
+    step += 1
+
+    # promotion now needs the FULL stable window again, not just 2 more
+    for i in range(cfg.stable_steps - 1):
+        assert arb.observe(step, loss=1.0, grad_norm=1.0) is None, i
+        step += 1
+    assert arb.observe(step, loss=1.0, grad_norm=1.0) is Mode.FAST
+
+
+def test_decision_log_records_reasons():
+    arb = PrecisionArbiter(ArbiterConfig(spike_factor=4.0, cooldown_steps=0, stable_steps=2))
+    step = warm(arb, 16)
+    arb.observe(step, loss=1.0, grad_norm=99.0)
+    assert arb.decisions[-1][1] is Mode.PRECISE
+    assert "grad-spike" in arb.decisions[-1][2]

@@ -5,7 +5,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _pbt import given, strategies as st
 
 from repro.core import cordic as cd
 from repro.core.qformat import Q16_16, from_fixed, to_fixed

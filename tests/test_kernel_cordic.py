@@ -1,16 +1,18 @@
-"""Pallas CORDIC kernel vs NumPy-int64 oracle (bit-exact) and vs
-math truth; shape sweeps incl. padding tails and iteration counts."""
+"""Pallas CORDIC kernels vs NumPy-int64 oracles (bit-exact) and vs
+math truth; shape sweeps incl. padding tails and iteration counts —
+for the sincos kernel and the universal (Walther-mode) op family."""
 
 import math
 
 import numpy as np
 import pytest
 
-from repro.core.cordic import cordic_sincos_q16
+from repro.core.cordic import atan2_q16, cordic_sincos_q16, tanh_q16
 from repro.core.qformat import Q16_16, to_fixed
-from repro.kernels.cordic import ops
+from repro.kernels.cordic import ops, ref
 from repro.kernels.cordic.cordic import cordic_kernel_call
 from repro.kernels.cordic.ref import cordic_sincos_ref
+from repro.kernels.cordic.universal import UNARY_OPS, atan2_kernel_call, universal_kernel_call
 
 
 SHAPES = [(128,), (4096,), (1000,), (7,), (33, 50), (2, 3, 129)]
@@ -81,3 +83,82 @@ def test_rope_tables_long_context():
             angle = math.fmod(int(p) * inv_freq, 2 * math.pi)
             assert float(np.asarray(sin)[i, j]) == pytest.approx(math.sin(angle), abs=1e-3)
             assert float(np.asarray(cos)[i, j]) == pytest.approx(math.cos(angle), abs=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# universal (Walther-mode) kernels: interpret-mode sweeps vs int64 oracles
+# ---------------------------------------------------------------------------
+
+
+def _rand_q16(rng, shape, lo, hi):
+    return np.round(rng.uniform(lo, hi, size=shape) * 65536.0).astype(np.int32)
+
+
+@pytest.mark.parametrize("op", sorted(UNARY_OPS))
+@pytest.mark.parametrize("shape", [(512,), (1000,), (7,), (9, 33)])
+def test_universal_unary_bit_exact_vs_oracle(rng, op, shape):
+    lo, hi = (0.0, 30000.0) if op in ("sqrt", "log") else (-20.0, 20.0)
+    w = _rand_q16(rng, shape, lo, hi)
+    got = np.asarray(universal_kernel_call(w, op=op))
+    want = ref.UNARY_REFS[op](w)
+    assert got.dtype == np.int32 and got.shape == shape
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("shape", [(128,), (777,), (5, 129)])
+def test_atan2_kernel_bit_exact_vs_oracle(rng, shape):
+    y = _rand_q16(rng, shape, -100.0, 100.0)
+    x = _rand_q16(rng, shape, -100.0, 100.0)
+    got = np.asarray(atan2_kernel_call(y, x))
+    np.testing.assert_array_equal(got, ref.atan2_ref(y, x))
+
+
+@pytest.mark.parametrize("block_rows", [8, 64])
+def test_universal_block_sweep(rng, block_rows):
+    w = _rand_q16(rng, (3000,), 0.0, 100.0)
+    got = np.asarray(universal_kernel_call(w, op="sqrt", block_rows=block_rows))
+    np.testing.assert_array_equal(got, ref.sqrt_ref(w))
+
+
+@pytest.mark.parametrize("stages", [16, 20])
+def test_universal_stage_sweep(rng, stages):
+    t = _rand_q16(rng, (513,), -5.0, 5.0)
+    got = np.asarray(universal_kernel_call(t, op="exp", stages=stages))
+    np.testing.assert_array_equal(got, ref.exp_ref(t, stages=stages))
+
+
+def test_universal_kernel_matches_core(rng):
+    """kernels/cordic/universal and core/cordic share one contract."""
+    t = _rand_q16(rng, (640,), -10.0, 10.0)
+    np.testing.assert_array_equal(
+        np.asarray(universal_kernel_call(t, op="tanh")), np.asarray(tanh_q16(t))
+    )
+    y = _rand_q16(rng, (640,), -10.0, 10.0)
+    np.testing.assert_array_equal(
+        np.asarray(atan2_kernel_call(y, t)), np.asarray(atan2_q16(y, t))
+    )
+
+
+def test_universal_padding_is_total(rng):
+    """Non-multiple-of-block sizes exercise the zero padding: every op
+    must be well-defined at 0 and the tail must not leak into outputs."""
+    for op in sorted(UNARY_OPS):
+        w = _rand_q16(rng, (130,), 0.5, 10.0)
+        a = np.asarray(universal_kernel_call(w, op=op, block_rows=8))
+        b = ref.UNARY_REFS[op](w)
+        np.testing.assert_array_equal(a, b)
+
+
+def test_universal_float_boundaries(rng):
+    y = rng.uniform(-50, 50, (2048,)).astype(np.float32)
+    x = rng.uniform(-50, 50, (2048,)).astype(np.float32)
+    got = np.asarray(ops.atan2(y, x))
+    np.testing.assert_allclose(got, np.arctan2(y, x), atol=2e-4)
+    w = rng.uniform(0.01, 1000.0, (2048,)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(ops.unary_op(w, "sqrt")), np.sqrt(w), atol=5e-2)
+    np.testing.assert_allclose(np.asarray(ops.unary_op(w, "log")), np.log(w), atol=2e-4)
+
+
+def test_universal_unknown_op_raises():
+    with pytest.raises(ValueError, match="unknown universal op"):
+        universal_kernel_call(np.zeros((8,), np.int32), op="cbrt")

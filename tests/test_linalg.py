@@ -3,7 +3,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _pbt import given, settings, strategies as st
 
 from repro.core import linalg as la
 from repro.core.qformat import Q16_16, from_fixed, to_fixed

@@ -4,7 +4,7 @@ and the paper's stated error bounds (§3.1, Eq. 6)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, strategies as st
+from _pbt import given, strategies as st
 
 from repro.core import qformat as qf
 

@@ -1,0 +1,217 @@
+"""Universal CORDIC (Walther modes) validation: schedule/gain constants,
+per-op error bounds vs float64 oracles over each op's full input range,
+bit-determinism, and FAST/PRECISE dispatch through MathEngine.
+
+The asserted bounds are the ones documented in ``core/cordic.py``'s
+module docstring (Eq. 14 analogues); each was measured with >= 2x
+margin over a 12k-point sweep.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from _pbt import given, strategies as st
+
+from repro.core import cordic as cd
+from repro.core.precision import MathEngine, Mode
+from repro.core.qformat import Q16_16, from_fixed, to_fixed
+
+ONE = 1 << 16
+
+
+def q(x):
+    return np.round(np.asarray(x, np.float64) * ONE).astype(np.int32)
+
+
+def f(v):
+    return np.asarray(v, np.int64) / ONE
+
+
+# ---------------------------------------------------------------------------
+# schedule and gain constants (Walther 1971)
+# ---------------------------------------------------------------------------
+
+
+def test_hyperbolic_schedule_repeats():
+    # repeats at 4 and 13 (r_{j+1} = 3 r_j + 1), nowhere else in 20 stages
+    sched = cd.hyperbolic_schedule(20)
+    assert sched == (1, 2, 3, 4, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 13, 14, 15, 16, 17, 18)
+    # convergence domain with repeats exceeds ln2/2 and atanh(3/5)
+    assert sum(math.atanh(2.0 ** -i) for i in sched) == pytest.approx(1.1182, abs=1e-3)
+
+
+def test_hyperbolic_gain_constant():
+    # K_h -> 0.8281593... ; table stores round(K_h^-1 * 2^29)
+    k_inv = cd.hyper_gain_inverse(cd.hyperbolic_schedule(20), 30) / (1 << 30)
+    assert k_inv == pytest.approx(1.2074971, abs=1e-6)
+    assert 1.0 / k_inv == pytest.approx(0.8281594, abs=1e-6)
+
+
+def test_atanh_table_head():
+    tab = cd.atanh_table(cd.hyperbolic_schedule(4), 16)
+    want = [round(math.atanh(2.0 ** -i) * ONE) for i in (1, 2, 3, 4)]
+    assert list(tab) == want
+
+
+def test_ln2_constants():
+    assert cd.LN2_Q16 == 45426
+    assert cd.EXP_SAT_HI_Q16 == round(math.log(32768.0) * ONE)
+
+
+# ---------------------------------------------------------------------------
+# error bounds vs float64 oracles (documented Eq. 14 analogues)
+# ---------------------------------------------------------------------------
+
+
+def test_atan2_dense_grid_bound(rng):
+    y = rng.uniform(-200.0, 200.0, 4001)
+    x = rng.uniform(-200.0, 200.0, 4001)
+    got = f(cd.atan2_q16(q(y), q(x)))
+    want = np.arctan2(f(q(y)), f(q(x)))
+    assert np.max(np.abs(got - want)) <= 1e-4
+
+
+def test_atan2_axes_and_quadrants():
+    pts = [(0.0, 1.0), (1.0, 0.0), (0.0, -1.0), (-1.0, 0.0),
+           (1.0, 1.0), (1.0, -1.0), (-1.0, -1.0), (-1.0, 1.0),
+           (1e-4, -100.0), (-1e-4, -100.0)]
+    for y, x in pts:
+        got = float(f(cd.atan2_q16(q(y), q(x))))
+        assert got == pytest.approx(math.atan2(y, x), abs=1e-4), (y, x)
+    assert int(cd.atan2_q16(np.int32(0), np.int32(0))) == 0
+
+
+def test_sqrt_bound(rng):
+    w = np.concatenate([
+        rng.uniform(2.0 ** -16, 1.0, 3000),
+        rng.uniform(1.0, 100.0, 3000),
+        rng.uniform(100.0, 32767.0, 3000),
+    ])
+    wq = np.maximum(q(w), 1)
+    got = f(cd.sqrt_q16(wq))
+    want = np.sqrt(f(wq))
+    assert np.all(np.abs(got - want) <= 2.0 ** -16 + 3e-5 * want)
+    # domain edges
+    assert int(cd.sqrt_q16(np.int32(0))) == 0
+    assert int(cd.sqrt_q16(np.int32(-123))) == 0
+    assert f(cd.sqrt_q16(np.int32((1 << 31) - 1))) == pytest.approx(math.sqrt(32768.0), rel=1e-4)
+
+
+def test_exp_bound(rng):
+    t = rng.uniform(-11.5, 10.39, 9000)
+    tq = q(t)
+    tq = tq[tq < cd.EXP_SAT_HI_Q16]
+    got = f(cd.exp_q16(tq))
+    want = np.exp(f(tq))
+    assert np.all(np.abs(got - want) <= 2.0 ** -16 + 6e-5 * want)
+    # saturation and flush-to-zero edges
+    assert int(cd.exp_q16(np.int32(cd.EXP_SAT_HI_Q16))) == (1 << 31) - 1
+    assert int(cd.exp_q16(np.int32(20 * ONE))) == (1 << 31) - 1
+    assert int(cd.exp_q16(np.int32(cd.EXP_FLUSH_LO_Q16))) == 0
+    assert float(f(cd.exp_q16(np.int32(0)))) == pytest.approx(1.0, abs=2e-5)
+
+
+def test_log_bound(rng):
+    w = np.concatenate([
+        rng.uniform(2.0 ** -10, 1.0, 3000),
+        rng.uniform(1.0, 32767.0, 3000),
+    ])
+    wq = np.maximum(q(w), 1)
+    got = f(cd.log_q16(wq))
+    want = np.log(f(wq))
+    assert np.max(np.abs(got - want)) <= 8e-5
+    # log(w <= 0) pins to Q16.16 min (the -inf stand-in)
+    assert int(cd.log_q16(np.int32(0))) == -(1 << 31)
+    assert int(cd.log_q16(np.int32(-5))) == -(1 << 31)
+
+
+def test_exp_log_roundtrip(rng):
+    t = rng.uniform(-8.0, 8.0, 2000)
+    back = f(cd.log_q16(cd.exp_q16(q(t))))
+    # log inherits exp's output quantization as relative error: a small
+    # e^t has few significant Q16.16 bits, so the bound carries a
+    # 2^-16 * e^-t term on top of the two ops' intrinsic bounds.
+    bound = 2e-4 + 1.5 * 2.0 ** -16 * np.exp(-f(q(t)))
+    assert np.all(np.abs(back - f(q(t))) <= bound)
+
+
+def test_tanh_bound(rng):
+    t = rng.uniform(-16.0, 16.0, 9000)
+    got = f(cd.tanh_q16(q(t)))
+    want = np.tanh(f(q(t)))
+    assert np.max(np.abs(got - want)) <= 6e-5
+    assert np.all(np.abs(got) <= 1.0)  # never overshoots saturation
+
+
+def test_sigmoid_bound(rng):
+    t = rng.uniform(-20.0, 20.0, 9000)
+    got = f(cd.sigmoid_q16(q(t)))
+    want = 1.0 / (1.0 + np.exp(-f(q(t))))
+    assert np.max(np.abs(got - want)) <= 5e-5
+    assert np.all((got >= 0.0) & (got <= 1.0))
+
+
+@given(st.floats(min_value=-100.0, max_value=100.0, allow_nan=False),
+       st.floats(min_value=-100.0, max_value=100.0, allow_nan=False))
+def test_atan2_property(y, x):
+    got = float(f(cd.atan2_q16(q(y), q(x))))
+    want = math.atan2(float(q(y)) / ONE, float(q(x)) / ONE)
+    assert got == pytest.approx(want, abs=1e-4)
+
+
+@given(st.floats(min_value=-6.0, max_value=6.0, allow_nan=False))
+def test_tanh_odd_symmetry(t):
+    a = int(cd.tanh_q16(q(t)))
+    b = int(cd.tanh_q16(q(-t)))
+    # odd symmetry up to the 1-ulp floor-rounding asymmetry
+    assert abs(a + b) <= 2
+
+
+def test_determinism_bitwise(rng):
+    t = q(rng.uniform(-20, 20, 1024))
+    for op in (cd.sqrt_q16, cd.exp_q16, cd.log_q16, cd.tanh_q16, cd.sigmoid_q16):
+        assert np.array_equal(np.asarray(op(t)), np.asarray(op(t)))
+    y, x = q(rng.uniform(-5, 5, 257)), q(rng.uniform(-5, 5, 257))
+    assert np.array_equal(np.asarray(cd.atan2_q16(y, x)), np.asarray(cd.atan2_q16(y, x)))
+
+
+# ---------------------------------------------------------------------------
+# MathEngine dispatch: both modes, same call sites (R1)
+# ---------------------------------------------------------------------------
+
+
+def test_opset_contains_universal_family():
+    from repro.core.precision import OP_SET
+
+    for op in ("atan2", "sqrt", "exp", "log", "tanh", "sigmoid"):
+        assert op in OP_SET
+
+
+@pytest.mark.parametrize(
+    "op,args,tol",
+    [
+        ("atan2", (np.float32(0.7), np.float32(-1.3)), 1e-4),
+        ("sqrt", (np.float32(17.0),), 1e-4),
+        ("exp", (np.float32(2.5),), 1e-3),
+        ("log", (np.float32(7.25),), 1e-4),
+        ("tanh", (np.float32(-0.8),), 1e-4),
+        ("sigmoid", (np.float32(1.9),), 1e-4),
+    ],
+)
+def test_engine_dispatch_fast_matches_precise(op, args, tol):
+    eng = MathEngine(Mode.PRECISE)
+    precise = float(eng.call(op, *args))
+    eng.set_mode(Mode.FAST)
+    fast = float(eng.call(op, *args))
+    assert fast == pytest.approx(precise, abs=tol)
+
+
+def test_engine_fast_path_is_cordic():
+    """The FAST table must hold the CORDIC kernels, not jnp fallbacks:
+    raw results agree bitwise with the Q16.16 op."""
+    eng = MathEngine(Mode.FAST)
+    x = np.float32(3.7)
+    got = np.asarray(eng.call("sqrt", x))
+    want = np.asarray(from_fixed(cd.sqrt_q16(to_fixed(x, Q16_16)), Q16_16))
+    assert np.array_equal(got, want)
