@@ -56,7 +56,7 @@ def bench_trig():
     return rows
 
 
-def bench_universal_family():
+def bench_universal_family(n: int = 65536):
     """Beyond the paper's Table 1: the universal-CORDIC transcendental
     family (Walther modes) vs the jnp float path — wall clock plus the
     documented error-bound check for each op (core/cordic.py docstring)."""
@@ -64,7 +64,6 @@ def bench_universal_family():
     from repro.core.qformat import Q16_16, to_fixed
 
     rng = np.random.default_rng(42)
-    n = 65536
     rows = []
 
     y = rng.uniform(-100, 100, n).astype(np.float32)
@@ -76,7 +75,20 @@ def bench_universal_family():
         np.asarray(cd.atan2_q16(yq, xq), np.int64) / 65536.0
         - np.arctan2(np.asarray(yq, np.int64) / 65536.0, np.asarray(xq, np.int64) / 65536.0)
     )))
-    rows.append(("univ.atan2_64k", t_q, f"jnp_us={t_f:.1f},max_err={err:.2e} (bound 1e-4)"))
+    rows.append((f"univ.atan2_{n//1024}k", t_q, f"jnp_us={t_f:.1f},max_err={err:.2e} (bound 1e-4)"))
+
+    # linear-vectoring division (ROADMAP div_q16): normalized error vs
+    # the documented 2^-15 * (1 + |q|) bound
+    den = np.where(np.abs(x) < 1e-3, np.float32(1.0), x)
+    yq2, dq = to_fixed(y, Q16_16), to_fixed(den, Q16_16)
+    t_q = _bench(lambda a, b: cd.div_q16(a, b), yq2, dq)
+    t_f = _bench(lambda a, b: a / b, jnp.asarray(y), jnp.asarray(den))
+    got = np.asarray(cd.div_q16(yq2, dq), np.int64) / 65536.0
+    want = (np.asarray(yq2, np.int64) / 65536.0) / (np.asarray(dq, np.int64) / 65536.0)
+    ok = np.abs(want) < 32767
+    err = float(np.max(np.abs(got - want)[ok] / (2.0 ** -15 * (1.0 + np.abs(want[ok])))))
+    rows.append((f"univ.div_{n//1024}k", t_q,
+                 f"jnp_us={t_f:.1f},err_vs_bound={err:.2f} (must be <= 1)"))
 
     # (op, fast, precise, inputs, relative?, documented bound) — sqrt and
     # exp have RELATIVE bounds, so their reported error is normalized by
@@ -104,7 +116,7 @@ def bench_universal_family():
         else:
             err = float(np.max(err))
         kind = "max_rel_err" if relative else "max_err"
-        rows.append((f"univ.{name}_64k", t_q, f"jnp_us={t_f:.1f},{kind}={err:.2e} (bound {bound})"))
+        rows.append((f"univ.{name}_{n//1024}k", t_q, f"jnp_us={t_f:.1f},{kind}={err:.2e} (bound {bound})"))
     return rows
 
 
@@ -176,6 +188,50 @@ def bench_switch():
     ]
 
 
+def bench_ladder_switch():
+    """Ladder generalization of the switch row: cycling every registered
+    level, scoped ``engine.at`` entry/exit, and a per-op policy swap —
+    each must stay an O(1) cached-context reference swap."""
+    from repro.core.precision import MathEngine, Mode, PrecisionPolicy, ladder_names
+
+    eng = MathEngine(Mode.PRECISE)
+    names = ladder_names()
+    for nm in names:            # warm every context
+        eng.set_level(nm)
+    eng.set_level("f32")
+
+    lat = []
+    for _ in range(25):
+        for nm in names:
+            lat.append(eng.set_level(nm))
+    lat = [v for v in lat if v > 0.0]
+    med = sorted(lat)[len(lat) // 2]
+
+    at_lat = []
+    for _ in range(50):
+        c0 = eng.switch_stats.total_latency_us
+        with eng.at("q8_24"):
+            pass
+        at_lat.append(eng.switch_stats.total_latency_us - c0)
+    at_med = sorted(at_lat)[len(at_lat) // 2]
+
+    pol = PrecisionPolicy(per_op={"sin": "q8_24", "matmul": "f32"})
+    eng.set_policy(pol)
+    eng.set_policy(None)        # warm both policy contexts
+    pol_lat = []
+    for _ in range(50):
+        pol_lat.append(eng.set_policy(pol))
+        pol_lat.append(eng.set_policy(None))
+    pol_med = sorted(pol_lat)[len(pol_lat) // 2]
+
+    return [
+        ("ladder.cycle_levels", med,
+         f"median_us={med:.2f},levels={len(names)} (O(1) per rung)"),
+        ("ladder.scoped_at", at_med, f"median_us={at_med:.2f} (enter+exit)"),
+        ("ladder.policy_swap", pol_med, f"median_us={pol_med:.2f}"),
+    ]
+
+
 def bench_footprint():
     """Paper §4.3.2: 88-byte static footprint decomposition."""
     from repro.core.qformat import static_footprint_bytes
@@ -203,8 +259,16 @@ def bench_deferred_error():
 
 
 ALL = [bench_trig, bench_universal_family, bench_scalar_mul,
-       bench_matmul_crossover, bench_switch, bench_footprint,
-       bench_deferred_error]
+       bench_matmul_crossover, bench_switch, bench_ladder_switch,
+       bench_footprint, bench_deferred_error]
+
+#: the CI smoke set: the O(1)-switch claim (binary + ladder) and the
+#: universal-family error bounds at a reduced batch — minutes, not hours.
+SMOKE = ["switch", "ladder", "universal"]
+
+#: generous CPU-host ceiling for the smoke gate: a retrace/rebuild on a
+#: switch shows up as milliseconds; shared-runner noise does not.
+SMOKE_SWITCH_BUDGET_US = 5e4
 
 
 def run():
@@ -212,3 +276,59 @@ def run():
     for fn in ALL:
         rows.extend(fn())
     return rows
+
+
+def main(argv=None):
+    """CLI: ``python benchmarks/bench_paper_tables.py [--smoke] [--out f.csv]``.
+
+    ``--smoke`` runs the switch-latency + ladder + universal-family
+    sections only and FAILS (exit 1) if any switch median exceeds the
+    O(1) budget — this is the per-PR regression gate in CI, with the
+    CSV uploaded as an artifact.
+    """
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None, help="write CSV here (default: stdout)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        rows = []
+        rows.extend(bench_switch())
+        rows.extend(bench_ladder_switch())
+        rows.extend(bench_universal_family(n=8192))
+    else:
+        rows = run()
+
+    lines = ["name,us_per_call,derived"]
+    lines += [f"{name},{us:.2f},{derived}" for name, us, derived in rows]
+    csv = "\n".join(lines) + "\n"
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(csv)
+    print(csv, end="")
+
+    if args.smoke:
+        switch_rows = [
+            (name, us) for name, us, _ in rows
+            if name in ("switch.two_phase_barrier", "ladder.cycle_levels",
+                        "ladder.scoped_at", "ladder.policy_swap")
+        ]
+        bad = [(n, u) for n, u in switch_rows if u > SMOKE_SWITCH_BUDGET_US]
+        if bad:
+            print(f"SMOKE FAIL: switch medians over {SMOKE_SWITCH_BUDGET_US}us: {bad}",
+                  file=sys.stderr)
+            return 1
+        print(f"smoke ok: {len(switch_rows)} switch medians under "
+              f"{SMOKE_SWITCH_BUDGET_US:.0f}us", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+    raise SystemExit(main())

@@ -25,6 +25,7 @@ def main() -> None:
         "mul": bench_paper_tables.bench_scalar_mul,
         "matmul": bench_paper_tables.bench_matmul_crossover,
         "switch": bench_paper_tables.bench_switch,
+        "ladder": bench_paper_tables.bench_ladder_switch,
         "footprint": bench_paper_tables.bench_footprint,
         "deferred": bench_paper_tables.bench_deferred_error,
         "roofline": roofline.run,

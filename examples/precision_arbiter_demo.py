@@ -1,32 +1,40 @@
-"""The dynamic precision arbiter in action: train FAST until numerics
-degrade (injected), fall back to PRECISE through the two-phase barrier,
-then promote back to FAST after a stable window — the paper's
-'explicit, safe, costless' mode choice made automatic.
+"""The dynamic precision arbiter in action, ladder edition: train at a
+cheap rung until numerics degrade (injected), escalate one rung at a
+time through the two-phase barrier — or jump straight to f32 on a NaN —
+then step back down after a stable window.  The paper's 'explicit,
+safe, costless' mode choice made automatic, across FOUR tiers instead
+of two.
 
 Run:  PYTHONPATH=src python examples/precision_arbiter_demo.py
 """
 
 from repro.core.arbiter import ArbiterConfig, PrecisionArbiter
-from repro.core.precision import MathEngine, Mode
+from repro.core.precision import MathEngine
 
 
 def main():
-    arb = PrecisionArbiter(ArbiterConfig(spike_factor=4.0, stable_steps=6, cooldown_steps=2))
-    eng = MathEngine(Mode.FAST)
+    ladder = ("q8_8", "q16_16", "q8_24", "f32")
+    arb = PrecisionArbiter(ArbiterConfig(
+        spike_factor=4.0, stable_steps=6, cooldown_steps=2,
+        ladder=ladder, start_mode="q8_8",
+    ))
+    eng = MathEngine("q8_8")
 
-    # healthy steps, then a gradient spike, then recovery
+    # healthy steps, then a gradient spike (one rung up), then a NaN
+    # (straight to the top), then a long recovery (stepwise back down)
     telemetry = [(s, 2.0 - 0.01 * s, 1.0) for s in range(10)]
     telemetry += [(10, 1.9, 40.0)]                      # spike!
-    telemetry += [(s, 1.9 - 0.005 * s, 1.0) for s in range(11, 30)]
+    telemetry += [(11, float("nan"), 1.0)]              # NaN!
+    telemetry += [(s, 1.8 - 0.004 * s, 1.0) for s in range(12, 60)]
 
     for step, loss, gnorm in telemetry:
         rec = arb.observe(step, loss, gnorm)
         if rec is not None:
-            us = eng.set_mode(rec)
+            us = eng.set_level(rec)
             reason = arb.decisions[-1][2]
-            print(f"step {step:3d}: -> {rec.value.upper():8s} ({reason})  barrier {us:.1f} us")
+            print(f"step {step:3d}: -> {str(rec).upper():8s} ({reason})  barrier {us:.1f} us")
     print(f"\ndecision log: {arb.decisions}")
-    print(f"engine mode at end: {eng.mode.value}")
+    print(f"engine level at end: {eng.level.name} (rung {arb.rung} of {len(ladder) - 1})")
 
 
 if __name__ == "__main__":

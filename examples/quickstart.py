@@ -43,6 +43,19 @@ def main():
     print(f"switched to FAST in {us:.1f} us")
     print("fast    sin(0.5) =", float(eng.call("sin", np.float32(0.5))))
 
+    # --- beyond the paper: the precision LADDER ---------------------------
+    # FAST/PRECISE are compat aliases into a registry of named levels;
+    # scoped dispatch + per-op policies pick a rung per operation.
+    from repro.core import PrecisionPolicy, ladder_names
+
+    print("ladder:", " < ".join(ladder_names()))
+    with eng.at("q8_24"):              # scoped: Q8.24 CORDIC datapaths
+        print("q8_24   sin(0.5) =", float(eng.call("sin", np.float32(0.5))))
+    pol = PrecisionPolicy(default="q16_16", per_op={"atan2": "q8_24"})
+    with eng.at(pol):                  # per-op: trig high-precision, rest fast
+        print("policy atan2(3,4) =", float(eng.call("atan2", np.float32(3), np.float32(4))))
+    print("fast   div(10, 4) =", float(eng.call("div", np.float32(10), np.float32(4))))
+
     # --- the 88-byte static footprint (paper §4.3.2) ----------------------
     print("static footprint:", static_footprint_bytes())
 

@@ -1,19 +1,25 @@
 """Sensor-fusion demo: complementary-filter attitude estimation on the
-universal-CORDIC op family, with arbiter-driven precision switching.
+precision ladder, with arbiter-driven multi-tier switching.
 
 The workload the paper's engine was built for (§7.2 names trig on an
 MCU), but using the ops a real IMU pipeline needs: ``atan2`` for the
 accelerometer attitude and ``sqrt`` for the gravity-vector norm — both
-dispatched through ``MathEngine``, so the SAME call sites run the
-Q16.16 universal-CORDIC path in FAST mode and the IEEE-754 path in
-PRECISE mode (R1).
+dispatched through ``MathEngine``, so the SAME call sites run whatever
+rung of the ladder is active (R1).
+
+The attitude loop runs at the ``q8_24`` level via a
+:class:`~repro.core.precision.PrecisionPolicy` — the angle-sensitive
+``atan2`` gets the high-precision Q8.24 CORDIC datapath while the
+gating ``sqrt`` stays on the cheaper Q16.16 path — and the demo
+reports the attitude-accuracy delta of Q8.24 vs Q16.16 at the end.
 
 A simulated pendulum swings while the gyro integrates angular rate and
 the accelerometer provides the absolute (but noisy) reference; the
 complementary filter blends them.  Mid-flight a vibration burst makes
 the accelerometer telemetry spike; the PrecisionArbiter sees the
-innovation blow up, falls back to PRECISE through the two-phase
-barrier, then promotes back to FAST after the configured stable window.
+innovation blow up, steps up the ladder (q8_24 -> f32) through the
+two-phase barrier, then steps back down after the configured stable
+window.
 
 Run:  PYTHONPATH=src python examples/sensor_fusion.py
 """
@@ -23,12 +29,16 @@ import math
 import numpy as np
 
 from repro.core.arbiter import ArbiterConfig, PrecisionArbiter
-from repro.core.precision import MathEngine, Mode
+from repro.core.precision import MathEngine, PrecisionPolicy
 
 DT = 0.01          # 100 Hz IMU
 ALPHA = 0.98       # complementary-filter gyro weight
 STEPS = 400
 BURST = range(180, 200)  # vibration burst steps
+
+#: the attitude policy: angle-sensitive atan2 at Q8.24, the |a| gate at
+#: the cheap Q16.16 rung — per-op levels inside ONE context.
+ATTITUDE_POLICY = PrecisionPolicy(default="q16_16", per_op={"atan2": "q8_24"})
 
 
 def simulate_imu(rng):
@@ -46,7 +56,7 @@ def simulate_imu(rng):
     return roll, gyro, ax.astype(np.float32), ay.astype(np.float32), az.astype(np.float32)
 
 
-def fuse(eng: MathEngine, arb: PrecisionArbiter, gyro, ax, ay, az):
+def fuse(eng: MathEngine, arb, gyro, ax, ay, az):
     """One pass of the complementary filter through the engine's ops."""
     est = 0.0
     history, switches = [], []
@@ -60,44 +70,76 @@ def fuse(eng: MathEngine, arb: PrecisionArbiter, gyro, ax, ay, az):
         est = ALPHA * pred + (1.0 - ALPHA) * acc_roll
         history.append(est)
 
+        if arb is None:
+            continue
         # arbiter telemetry: innovation as "loss", |a|-deviation as the
         # spike channel (vibration shows up here first)
         innovation = abs(acc_roll - pred)
         rec = arb.observe(s, loss=innovation, grad_norm=abs(norm - 1.0) + 1e-3)
         if rec is not None:
-            us = eng.set_mode(rec)
-            switches.append((s, rec.value, arb.decisions[-1][2], us))
+            us = eng.set_level(rec)
+            switches.append((s, rec, arb.decisions[-1][2], us))
     return np.array(history), switches
+
+
+def run_fixed_level(level: str, gyro, ax, ay, az) -> np.ndarray:
+    """The same filter pinned to one ladder rung (no arbiter)."""
+    eng = MathEngine(level)
+    est, _ = fuse(eng, None, gyro, ax, ay, az)
+    return est
 
 
 def main():
     rng = np.random.default_rng(42)
     roll, gyro, ax, ay, az = simulate_imu(rng)
+    quiet = np.ones(STEPS, bool)
+    quiet[list(BURST)] = False
 
+    def rms(est):
+        return float(np.sqrt(np.mean((est - roll)[quiet] ** 2)))
+
+    # ---- the ladder payoff: attitude accuracy per trig level -------------
+    # The filter itself is identical; only the atan2/sqrt datapath moves.
+    est_q16 = run_fixed_level("q16_16", gyro, ax, ay, az)
+    eng24 = MathEngine("q16_16")
+    with eng24.at(ATTITUDE_POLICY):
+        est_q24, _ = fuse(eng24, None, gyro, ax, ay, az)
+    est_f32 = run_fixed_level("f32", gyro, ax, ay, az)
+    r16, r24, r32 = rms(est_q16), rms(est_q24), rms(est_f32)
+    print("attitude RMS error (quiet) by trig level:")
+    print(f"  q16_16          : {r16:.7f} rad")
+    print(f"  q8_24 (policy)  : {r24:.7f} rad")
+    print(f"  f32             : {r32:.7f} rad")
+    print(f"  q8_24 vs q16_16 : {r16 - r24:+.2e} rad "
+          f"(residual vs f32: {abs(r24 - r32):.2e}; "
+          f"Q8.24 removes ~{100.0 * (1.0 - abs(r24 - r32) / max(abs(r16 - r32), 1e-12)):.0f}% "
+          f"of the fixed-point attitude error)")
+
+    # ---- arbiter-driven run: q8_24 attitude loop, f32 rescue rung --------
     # innovation is a noisy, non-monotone signal: gate on grad-norm
     # spikes only (regress_tol=inf disables the loss-trend channel,
     # which would otherwise keep resetting the stability counter)
     arb = PrecisionArbiter(ArbiterConfig(
         spike_factor=6.0, regress_tol=float("inf"),
-        stable_steps=40, cooldown_steps=10, start_mode=Mode.FAST,
+        stable_steps=40, cooldown_steps=10,
+        ladder=("q8_24", "f32"), start_mode="q8_24",
     ))
-    eng = MathEngine(Mode.FAST)
+    eng = MathEngine("q8_24")
     est, switches = fuse(eng, arb, gyro, ax, ay, az)
 
     err = np.abs(est - roll)
-    quiet = np.ones(STEPS, bool)
-    quiet[list(BURST)] = False
-    print(f"attitude RMS error (quiet): {np.sqrt(np.mean(err[quiet]**2)):.5f} rad")
+    print(f"\narbitrated run (ladder q8_24 -> f32):")
+    print(f"attitude RMS error (quiet): {rms(est):.7f} rad")
     print(f"attitude max error (burst): {err[~quiet].max():.5f} rad")
-    for s, mode, reason, us in switches:
-        print(f"step {s:3d}: -> {mode.upper():8s} ({reason})  barrier {us:.1f} us")
-    print(f"engine mode at end: {eng.mode.value}")
+    for s, lvl, reason, us in switches:
+        print(f"step {s:3d}: -> {str(lvl).upper():8s} ({reason})  barrier {us:.1f} us")
+    print(f"engine level at end: {eng.level.name}")
 
-    # both modes agree to the documented FAST-path bounds on this task
-    eng_f, eng_p = MathEngine(Mode.FAST), MathEngine(Mode.PRECISE)
-    a = float(eng_f.call("atan2", np.float32(0.31), np.float32(0.95)))
+    # both rungs agree to the documented FAST-path bounds on this task
+    eng_q, eng_p = MathEngine("q8_24"), MathEngine("f32")
+    a = float(eng_q.call("atan2", np.float32(0.31), np.float32(0.95)))
     b = float(eng_p.call("atan2", np.float32(0.31), np.float32(0.95)))
-    print(f"atan2 FAST vs PRECISE: {a:.6f} vs {b:.6f} (|d|={abs(a-b):.2e})")
+    print(f"atan2 q8_24 vs f32: {a:.7f} vs {b:.7f} (|d|={abs(a-b):.2e})")
 
 
 if __name__ == "__main__":

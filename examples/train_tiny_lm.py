@@ -9,7 +9,7 @@ import argparse
 import dataclasses
 
 from repro.configs import get_config, smoke
-from repro.core.precision import Mode
+from repro.core.arbiter import ArbiterConfig
 from repro.data.pipeline import DataConfig
 from repro.models.config import LayerSpec, ModelConfig
 from repro.runtime.train_loop import Trainer, TrainerConfig
@@ -29,18 +29,30 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--tiny", action="store_true", help="smoke-size model (CI)")
-    ap.add_argument("--mode", default="fast", choices=["fast", "precise"])
+    ap.add_argument("--mode", default="fast",
+                    choices=["fast", "precise", "q8_8", "q16_16", "q8_24", "f32"],
+                    help="Mode compat alias or precision-ladder level name")
     args = ap.parse_args()
 
     cfg = smoke("deepseek_7b") if args.tiny else lm_100m()
     print(f"model: {cfg.name}  params: {cfg.param_count()/1e6:.1f}M")
 
+    # binary compat aliases keep the classic FAST<->PRECISE arbiter; a
+    # ladder level name gets the full multi-tier ladder so the arbiter's
+    # start rung matches the engine's start level
+    if args.mode in ("fast", "precise"):
+        arb_cfg = ArbiterConfig()
+    else:
+        arb_cfg = ArbiterConfig(
+            ladder=("q8_8", "q16_16", "q8_24", "f32"), start_mode=args.mode
+        )
     tcfg = TrainerConfig(
         total_steps=args.steps,
         ckpt_every=max(args.steps // 4, 1),
         ckpt_dir="/tmp/repro_tiny_lm",
-        start_mode=Mode(args.mode),
+        start_mode=args.mode,  # engine resolves aliases and level names alike
         use_arbiter=True,
+        arbiter=arb_cfg,
     )
     data = DataConfig(vocab=cfg.vocab, seq_len=128 if not args.tiny else 32,
                       global_batch=8 if not args.tiny else 4)

@@ -44,6 +44,16 @@ def _flatten_with_names(tree):
 
 
 class Checkpointer:
+    #: in-process registry of in-flight async saves, keyed by resolved
+    #: directory.  A NEW Checkpointer on the same directory joins any
+    #: pending save first, so "restart after crash" never reads a stale
+    #: latest_step because the previous instance's background thread had
+    #: not committed yet (the resume-cadence bug: restoring step 3 while
+    #: step 7's rename was still in flight).  A real process crash kills
+    #: the thread mid-tmp-write, which the .tmp atomicity already covers.
+    _pending: dict = {}
+    _pending_lock = threading.Lock()
+
     def __init__(self, directory: str, keep: int = 3):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
@@ -51,6 +61,18 @@ class Checkpointer:
         self._thread: Optional[threading.Thread] = None
         self.save_count = 0
         self.last_save_s = 0.0
+        self._join_pending()
+
+    def _key(self) -> str:
+        return str(self.dir.resolve())
+
+    def _join_pending(self) -> None:
+        # the lock also serializes against save()'s register+start pair,
+        # so a fetched thread is always already started (join-able)
+        with self._pending_lock:
+            thread = Checkpointer._pending.get(self._key())
+        if thread is not None and thread is not threading.current_thread():
+            thread.join()
 
     # -- save ---------------------------------------------------------------
 
@@ -84,12 +106,21 @@ class Checkpointer:
             self.save_count += 1
             self.last_save_s = time.time() - t0
             self._gc()
+            # deregister so the class-level registry stays bounded; only
+            # our own entry (a newer save may have replaced it)
+            with Checkpointer._pending_lock:
+                if Checkpointer._pending.get(self._key()) is threading.current_thread():
+                    del Checkpointer._pending[self._key()]
 
         if blocking:
             work()
         else:
             self._thread = threading.Thread(target=work, daemon=True)
-            self._thread.start()
+            with self._pending_lock:
+                # register and start under one lock: a concurrent
+                # _join_pending can never observe an unstarted thread
+                Checkpointer._pending[self._key()] = self._thread
+                self._thread.start()
 
     def wait(self) -> None:
         if self._thread is not None:
@@ -104,6 +135,7 @@ class Checkpointer:
     # -- restore ------------------------------------------------------------
 
     def all_steps(self):
+        self._join_pending()  # never list around an uncommitted save
         out = []
         for p in self.dir.glob("step_*"):
             if p.suffix == ".tmp" or not (p / "manifest.json").exists():

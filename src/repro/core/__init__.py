@@ -14,16 +14,23 @@ from repro.core.cordic import (
     ATAN_TABLE_Q16,
     CORDIC_K_INV_Q16,
     HYPER_STAGES,
+    ITER_Q24,
+    angle_consts,
     atan2_q16,
+    atan2_q24,
     cordic_atan2,
+    cordic_atan2_24,
+    cordic_div,
     cordic_exp,
     cordic_log,
     cordic_rotate_q16,
     cordic_sigmoid,
     cordic_sincos,
+    cordic_sincos24,
     cordic_sincos_q16,
     cordic_sqrt,
     cordic_tanh,
+    div_q16,
     exact_rope_phase_q16,
     exp_q16,
     hyper_gain_inverse,
@@ -41,7 +48,20 @@ from repro.core.linalg import (
     qmatmul_deferred,
     qmatmul_per_element,
 )
-from repro.core.precision import OP_SET, MathEngine, Mode, PrecisionContext
+from repro.core.precision import (
+    MODE_ALIASES,
+    OP_SET,
+    MathEngine,
+    Mode,
+    PrecisionContext,
+    PrecisionLevel,
+    PrecisionPolicy,
+    ladder,
+    ladder_names,
+    level,
+    register_level,
+    resolve_level,
+)
 from repro.core.qformat import (
     Q0_7,
     Q1_15,

@@ -1,26 +1,33 @@
-"""Dynamic precision arbiter — beyond-paper extension of C4.
+"""Dynamic precision arbiter — beyond-paper extension of C4, ladder
+edition.
 
 The paper leaves the FAST/PRECISE choice to "the application layer"
 (§7.2: CORDIC for trig, FPU for small matrices).  At training scale the
 application-layer signal is numerics health: quantized (FAST) steps are
 cheaper but can destabilize optimization.  The arbiter watches loss and
-gradient-norm telemetry and *recommends* mode transitions, which the
-engine executes through the two-phase barrier at step boundaries — the
-paper's "explicit, safe, costless" choice made adaptive.
+gradient-norm telemetry and *recommends* transitions along a precision
+ladder, which the engine executes through the two-phase barrier at step
+boundaries — the paper's "explicit, safe, costless" choice made
+adaptive.
 
-Policy (hysteresis state machine):
-  FAST -> PRECISE on  (a) non-finite loss, (b) grad-norm spike
+The ladder generalizes the original binary state machine: entries are
+ordered cheapest -> most precise (defaults to the compat pair
+``(Mode.FAST, Mode.PRECISE)``; pass level names like
+``("q8_8", "q16_16", "q8_24", "f32")`` for multi-tier stepping).
+
+Policy (hysteresis stepping):
+  step UP (more precise) one rung on  (a) grad-norm spike
                       > spike_factor x running median, or
-                      (c) loss regression > regress_tol over the window.
-  PRECISE -> FAST after `stable_steps` consecutive healthy steps,
+                      (b) loss regression > regress_tol over the window.
+  jump to the TOP rung on non-finite loss/grad — a hard safety signal
+                      that bypasses the cooldown (a NaN loss means every
+                      further step at this rung is wasted; flapping
+                      protection must not delay the rescue).
+  step DOWN one rung after `stable_steps` consecutive healthy steps,
                       with a cooldown to prevent flapping.
 
-Non-finite telemetry is a hard safety signal: it forces the fallback
-even inside the cooldown window (a NaN loss in FAST mode means every
-further FAST step is wasted — flapping protection must not delay the
-rescue).  Spike/regression fallbacks and all promotions still honor
-the cooldown, and any unhealthy step resets the ``stable_steps``
-promotion counter.
+Spike/regression escalations and all demotions honor the cooldown, and
+any unhealthy step resets the ``stable_steps`` demotion counter.
 """
 
 from __future__ import annotations
@@ -28,7 +35,7 @@ from __future__ import annotations
 import math
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Optional
+from typing import Any, Deque, Optional, Tuple
 
 from repro.core.precision import Mode
 
@@ -38,11 +45,14 @@ __all__ = ["ArbiterConfig", "PrecisionArbiter"]
 @dataclass(frozen=True)
 class ArbiterConfig:
     spike_factor: float = 8.0        # grad-norm spike threshold vs running median
-    regress_tol: float = 0.25        # fractional loss regression that trips fallback
+    regress_tol: float = 0.25        # fractional loss regression that trips escalation
     window: int = 32                 # telemetry window
-    stable_steps: int = 64           # healthy steps before promoting back to FAST
+    stable_steps: int = 64           # healthy steps before stepping back down
     cooldown_steps: int = 16         # minimum steps between switches
-    start_mode: Mode = Mode.FAST
+    #: ordered cheapest -> most precise; entries are whatever the engine
+    #: accepts (Mode compat aliases or ladder level names).
+    ladder: Tuple[Any, ...] = (Mode.FAST, Mode.PRECISE)
+    start_mode: Any = Mode.FAST      # must be a ladder entry
 
 
 @dataclass
@@ -50,12 +60,37 @@ class PrecisionArbiter:
     config: ArbiterConfig = field(default_factory=ArbiterConfig)
 
     def __post_init__(self):
-        self.mode: Mode = self.config.start_mode
-        self._losses: Deque[float] = deque(maxlen=self.config.window)
-        self._gnorms: Deque[float] = deque(maxlen=self.config.window)
+        cfg = self.config
+        if not cfg.ladder:
+            raise ValueError("arbiter ladder must have at least one entry")
+        self._ladder = tuple(cfg.ladder)
+        try:
+            self._idx = self._ladder.index(cfg.start_mode)
+        except ValueError:
+            raise ValueError(
+                f"start_mode {cfg.start_mode!r} is not in the ladder {self._ladder!r}"
+            ) from None
+        self._losses: Deque[float] = deque(maxlen=cfg.window)
+        self._gnorms: Deque[float] = deque(maxlen=cfg.window)
         self._stable = 0
         self._last_switch_step = -(10**9)
         self.decisions: list = []
+
+    # -- state --------------------------------------------------------------
+
+    @property
+    def mode(self) -> Any:
+        """The current ladder entry (compat: a Mode for the default ladder)."""
+        return self._ladder[self._idx]
+
+    @property
+    def ladder(self) -> Tuple[Any, ...]:
+        return self._ladder
+
+    @property
+    def rung(self) -> int:
+        """Index of the current entry (0 = cheapest)."""
+        return self._idx
 
     # -- helpers -----------------------------------------------------------
 
@@ -82,11 +117,19 @@ class PrecisionArbiter:
                 return f"loss-regression {past:.4g} -> {recent:.4g}"
         return None
 
+    def _switch(self, step: int, idx: int, reason: str):
+        self._idx = idx
+        self._last_switch_step = step
+        self._stable = 0
+        entry = self._ladder[idx]
+        self.decisions.append((step, entry, reason))
+        return entry
+
     # -- main entry ---------------------------------------------------------
 
-    def observe(self, step: int, loss: float, grad_norm: float) -> Optional[Mode]:
-        """Feed one step's telemetry; returns a Mode if a switch is
-        recommended, else None.  Non-finite steps are NOT added to the
+    def observe(self, step: int, loss: float, grad_norm: float) -> Optional[Any]:
+        """Feed one step's telemetry; returns a ladder entry if a switch
+        is recommended, else None.  Non-finite steps are NOT added to the
         telemetry window (they would poison the medians)."""
         reason = self._unhealthy(loss, grad_norm)
         cooled = step - self._last_switch_step >= self.config.cooldown_steps
@@ -100,23 +143,18 @@ class PrecisionArbiter:
         else:
             self._stable = 0
 
-        if self.mode is Mode.FAST and reason is not None and (cooled or forced):
-            self.mode = Mode.PRECISE
-            self._last_switch_step = step
-            self._stable = 0
-            self.decisions.append((step, Mode.PRECISE, reason))
-            return Mode.PRECISE
+        top = len(self._ladder) - 1
+        if reason is not None and self._idx < top and (cooled or forced):
+            # non-finite jumps straight to the most precise rung; spikes
+            # and regressions escalate one rung at a time
+            return self._switch(step, top if forced else self._idx + 1, reason)
 
         if (
-            self.mode is Mode.PRECISE
+            self._idx > 0
             and reason is None
             and self._stable >= self.config.stable_steps
             and cooled
         ):
-            self.mode = Mode.FAST
-            self._last_switch_step = step
-            self._stable = 0
-            self.decisions.append((step, Mode.FAST, "stable"))
-            return Mode.FAST
+            return self._switch(step, self._idx - 1, "stable")
 
         return None

@@ -93,7 +93,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.qformat import Q16_16, from_fixed, to_fixed
+from repro.core.qformat import Q8_24, Q16_16, from_fixed, to_fixed
 
 __all__ = [
     "ATAN_TABLE_Q16",
@@ -106,6 +106,8 @@ __all__ = [
     "EXP_SAT_HI_Q16",
     "EXP_FLUSH_LO_Q16",
     "HYPER_STAGES",
+    "ITER_Q24",
+    "angle_consts",
     "atan_table",
     "gain_inverse",
     "hyperbolic_schedule",
@@ -113,14 +115,19 @@ __all__ = [
     "hyper_gain_inverse",
     "cordic_sincos_q16",
     "cordic_sincos",
+    "cordic_sincos24",
     "cordic_rotate_q16",
     "atan2_q16",
+    "atan2_q24",
+    "div_q16",
     "sqrt_q16",
     "exp_q16",
     "log_q16",
     "tanh_q16",
     "sigmoid_q16",
     "cordic_atan2",
+    "cordic_atan2_24",
+    "cordic_div",
     "cordic_sqrt",
     "cordic_exp",
     "cordic_log",
@@ -151,29 +158,46 @@ def gain_inverse(iterations: int, frac_bits: int = 16) -> int:
     return int(round((1.0 / k) * (1 << frac_bits)))
 
 
+def angle_consts(frac_bits: int = 16) -> Tuple[int, int, int]:
+    """(pi, pi/2, 2*pi) as raw Q(m.n) integers for any fraction width.
+
+    2*pi in Q8.24 is ~1.05e8 — every format up to Q4.28 holds a full
+    turn in int32, which is what bounds the ladder's angle formats.
+    """
+    scale = 1 << frac_bits
+    return (
+        int(round(math.pi * scale)),
+        int(round(math.pi / 2 * scale)),
+        int(round(2 * math.pi * scale)),
+    )
+
+
 # Paper's constants (verified identical to our generators):
 ATAN_TABLE_Q16 = atan_table(16)                 # [51472, 30386, 16055, 8150, ...]
 CORDIC_K_INV_Q16 = gain_inverse(16)             # 39797
-PI_Q16 = int(round(math.pi * _U16))             # 205887
-HALF_PI_Q16 = int(round(math.pi / 2 * _U16))    # 102944
-TWO_PI_Q16 = int(round(2 * math.pi * _U16))     # 411775
+PI_Q16, HALF_PI_Q16, TWO_PI_Q16 = angle_consts(16)   # 205887, 102944, 411775
+
+#: default iteration count for the Q8.24 high-precision datapath: the
+#: residual rotation atan(2**-23) ~= 1.2e-7 rad sits at one Q8.24 ulp.
+ITER_Q24 = 24
 
 assert CORDIC_K_INV_Q16 == 39797, "paper §5.2 constant mismatch"
 assert PI_Q16 == 205887 and HALF_PI_Q16 == 102944, "paper §5.2 constants"
 assert int(ATAN_TABLE_Q16[0]) == 51472, "paper Listing 2 atan(1) entry"
 
 
-def _range_reduce_q16(theta_q):
-    """Branchless reduction of any int32 Q16.16 angle to [-pi/2, pi/2].
+def _range_reduce_q(theta_q, frac_bits: int = 16):
+    """Branchless reduction of any int32 Q(m.n) angle to [-pi/2, pi/2].
 
     Returns (reduced_angle, negate_flag).  negate applies to BOTH sin
     and cos (paper Listing 2's sin comment is incorrect — see module
     docstring).
     """
+    pi_q, half_pi_q, two_pi_q = angle_consts(frac_bits)
     theta_q = jnp.asarray(theta_q, jnp.int32)
-    two_pi = jnp.int32(TWO_PI_Q16)
-    pi = jnp.int32(PI_Q16)
-    half_pi = jnp.int32(HALF_PI_Q16)
+    two_pi = jnp.int32(two_pi_q)
+    pi = jnp.int32(pi_q)
+    half_pi = jnp.int32(half_pi_q)
     # floor-mod brings theta into [-pi, pi)
     r = jnp.remainder(theta_q + pi, two_pi) - pi
     hi = r > half_pi
@@ -181,6 +205,10 @@ def _range_reduce_q16(theta_q):
     r = jnp.where(hi, r - pi, r)
     r = jnp.where(lo, r + pi, r)
     return r, hi | lo
+
+
+def _range_reduce_q16(theta_q):
+    return _range_reduce_q(theta_q, 16)
 
 
 @partial(jax.jit, static_argnames=("iterations", "frac_bits"))
@@ -194,7 +222,7 @@ def cordic_sincos_q16(theta_q, iterations: int = 16, frac_bits: int = 16):
     table = atan_table(iterations, frac_bits)
     k_inv = gain_inverse(iterations, frac_bits)
 
-    z, negate = _range_reduce_q16(theta_q)
+    z, negate = _range_reduce_q(theta_q, frac_bits)
     x = jnp.full_like(z, k_inv)
     y = jnp.zeros_like(z)
 
@@ -218,6 +246,22 @@ def cordic_sincos(theta, iterations: int = 16):
     theta_q = to_fixed(theta, Q16_16)
     sin_q, cos_q = cordic_sincos_q16(theta_q, iterations=iterations)
     return from_fixed(sin_q, Q16_16), from_fixed(cos_q, Q16_16)
+
+
+@partial(jax.jit, static_argnames=("iterations",))
+def cordic_sincos24(theta, iterations: int = ITER_Q24):
+    """Q8.24 high-precision sincos (pipeline boundary).
+
+    24 iterations on the Q8.24 datapath: angular error ~2e-6 rad
+    (measured; asserted in tests/test_precision_ladder.py) vs the
+    Q16.16 path's 8e-4-level output error — the angle-sensitive
+    sensor-fusion rung of the ladder.  Input angles must satisfy
+    |theta| < 128 - pi (the Q8.24 dynamic range); the sensor-fusion
+    and RoPE callers reduce mod 2*pi upstream.
+    """
+    theta_q = to_fixed(theta, Q8_24)
+    sin_q, cos_q = cordic_sincos_q16(theta_q, iterations=iterations, frac_bits=24)
+    return from_fixed(sin_q, Q8_24), from_fixed(cos_q, Q8_24)
 
 
 @partial(jax.jit, static_argnames=("iterations", "frac_bits"))
@@ -405,12 +449,64 @@ def _linear_div_q16(num, den, iterations: int = 17):
     return z
 
 
-def atan2_q16_body(y_q, x_q, iterations: int = 16):
-    """Circular-vectoring atan2 on Q16.16 operands; pure jnp, unjitted
-    (shared with the Pallas kernel body)."""
+def div_q16_body(num_q, den_q, iterations: int = 17):
+    """Full-range linear-vectoring division num/den on Q16.16 (ROADMAP
+    ``div_q16``).
+
+    Normalization story: ``_linear_div_q16`` converges for quotients in
+    (-2, 2) (shift schedule starting at 0, sum 2^-i = 2).  BOTH
+    operands are pre-normalized to bit 29 — numerator left-shifts are
+    exact, so no significand bits are ever discarded (a numerator
+    right-shift would cost 2^-msb(den) relative error on small
+    denominators) — and the quotient's net exponent
+    ``e = msb(|num|) - msb(|den|)`` is applied to the result: rounded
+    right-shift for e < 0, saturating left-shift for e > 0.  Error:
+    |eps| <= 2**-15 * (1 + |num/den|) — one Q16.16 quantization step
+    for sub-unit quotients, ~2**-15 relative above 1 (measured with 2x
+    margin over the full operand range; asserted in
+    tests/test_precision_ladder.py and gated in the benchmark smoke).
+
+    Edge cases: den == 0 saturates to sign(num) * Q16.16 max (0/0 = 0);
+    INT32_MIN operands are clamped one ulp up so |.| never wraps.
+    """
+    num = _clamp_raw(num_q)
+    den = _clamp_raw(den_q)
+    an = jnp.abs(num)
+    ad = jnp.abs(den)
+    bn = _ilog2(jnp.maximum(an, 1))
+    bd = _ilog2(jnp.maximum(ad, 1))
+    # normalize both significands to [2^29, 2^30): exact for the
+    # numerator (left shift), <= 2^-28 relative for a denominator
+    # above bit 29 (bd in {30}, right shift by <= 1)
+    nn = _shift_signed(an, bn - _i32(_HFRAC))
+    dd = _shift_signed(ad, bd - _i32(_HFRAC))
+    z = _linear_div_q16(nn, jnp.maximum(dd, 1), iterations)  # in (0.5, 2) Q16.16
+    e = bn - bd
+    zr = _round_shift_right(z, jnp.maximum(-e, 0))
+    sl = jnp.maximum(e, 0)
+    fits = zr <= (_i32(_RAW_MAX) >> sl)
+    mag = jnp.where(fits, zr << sl, _i32(_RAW_MAX))
+    out = jnp.where((num < 0) != (den < 0), -mag, mag)
+    sat = jnp.where(num > 0, _i32(_RAW_MAX), _i32(_RAW_MIN + 1))
+    return jnp.where(
+        jnp.asarray(den_q, jnp.int32) == 0,
+        jnp.where(num == 0, _i32(0), sat),
+        out,
+    )
+
+
+def atan2_q16_body(y_q, x_q, iterations: int = 16, frac_bits: int = 16):
+    """Circular-vectoring atan2 on Q(m.n) operands; pure jnp, unjitted
+    (shared with the Pallas kernel body).
+
+    The operand normalization is scale-invariant, so ``frac_bits``
+    only selects the *output* angle format (the atan accumulator
+    table); ``frac_bits=24`` is the Q8.24 ladder rung.
+    """
     y0 = _clamp_raw(y_q)
     x0 = _clamp_raw(x_q)
-    table = atan_table(iterations)
+    table = atan_table(iterations, frac_bits)
+    pi_q = angle_consts(frac_bits)[0]
 
     # fold x<0 to the right half-plane by point reflection; the +/-pi
     # restoration direction comes from the sign of the original y
@@ -438,7 +534,7 @@ def atan2_q16_body(y_q, x_q, iterations: int = 16):
             jnp.where(neg, z - t, z + t),
         )
 
-    half_turn = jnp.where(y0 < 0, _i32(-PI_Q16), _i32(PI_Q16))
+    half_turn = jnp.where(y0 < 0, _i32(-pi_q), _i32(pi_q))
     out = jnp.where(neg_x, z + half_turn, z)
     return jnp.where((x0 == 0) & (y0 == 0), _i32(0), out)
 
@@ -547,12 +643,20 @@ def _jit_q(body, static=("iterations",)):
     return partial(jax.jit, static_argnames=static)(body)
 
 
-atan2_q16 = _jit_q(atan2_q16_body)
+atan2_q16 = _jit_q(atan2_q16_body, static=("iterations", "frac_bits"))
+div_q16 = _jit_q(div_q16_body)
 sqrt_q16 = _jit_q(sqrt_q16_body, static=("stages",))
 exp_q16 = _jit_q(exp_q16_body, static=("stages",))
 log_q16 = _jit_q(log_q16_body, static=("stages",))
 tanh_q16 = _jit_q(tanh_q16_body, static=("stages",))
 sigmoid_q16 = _jit_q(sigmoid_q16_body, static=("stages",))
+
+
+def atan2_q24(y_q, x_q, iterations: int = ITER_Q24):
+    """Circular-vectoring atan2 with a Q8.24 output angle (ladder rung
+    ``q8_24``); operands are Q8.24 raws (any common scale works —
+    atan2 is scale-invariant)."""
+    return atan2_q16(y_q, x_q, iterations=iterations, frac_bits=24)
 
 
 # float-boundary convenience wrappers (pipeline boundary, like cordic_sincos)
@@ -561,6 +665,26 @@ sigmoid_q16 = _jit_q(sigmoid_q16_body, static=("stages",))
 @jax.jit
 def cordic_atan2(y, x):
     return from_fixed(atan2_q16(to_fixed(y, Q16_16), to_fixed(x, Q16_16)), Q16_16)
+
+
+@jax.jit
+def cordic_atan2_24(y, x):
+    """Q8.24 atan2 at the float boundary.  Operands are pre-normalized
+    by max(|y|, |x|) so any float magnitude fits the Q8.24 word —
+    atan2 is scale-invariant, so this costs accuracy nothing and keeps
+    the high-precision rung total over the f32 range."""
+    y = jnp.asarray(y, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    m = jnp.maximum(jnp.abs(y), jnp.abs(x))
+    s = jnp.where(m > 0, m, jnp.float32(1.0))
+    return from_fixed(atan2_q24(to_fixed(y / s, Q8_24), to_fixed(x / s, Q8_24)), Q8_24)
+
+
+@jax.jit
+def cordic_div(num, den):
+    """Linear-vectoring division at the float boundary (engine op
+    ``div``): saturates at the Q16.16 envelope like every FAST op."""
+    return from_fixed(div_q16(to_fixed(num, Q16_16), to_fixed(den, Q16_16)), Q16_16)
 
 
 @jax.jit

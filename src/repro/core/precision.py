@@ -1,54 +1,242 @@
-"""Runtime precision switching — the paper's principal contribution (C4, §4).
+"""Runtime precision ladder — the paper's C4 engine (§4), generalized.
 
-The paper keeps two parallel implementations of every operation in a
+The paper keeps TWO parallel implementations of every operation in a
 dispatch table ``D: F -> {f^Q, f^F}`` and swaps the whole table
-atomically at O(1) cost, satisfying:
+atomically at O(1) cost.  Transprecision platforms (Tagliavini et al.)
+show the win comes from a *ladder* of formats chosen per operation, so
+this module generalizes the binary FAST/PRECISE space to:
 
-* R1 (API stability)      — callers never change;
-* R2 (zero-cost abstraction) — no per-op dispatch overhead in steady state;
-* R3 (O(1) switch latency) — pointer reassignment only;
-* R4 (RTOS compatibility)  — a two-phase barrier guards the swap.
+* **PrecisionLevel registry** — named levels, each binding a
+  :class:`~repro.core.qformat.QFormat` (fixed-point) or a float dtype,
+  ordered cheapest -> most precise::
 
-JAX adaptation: "function pointers" become **ahead-of-time compiled
-executables**.  ``jax.jit(fn).lower(specs).compile()`` runs once per
-(op, mode) at engine init; ``set_mode`` then swaps a dict reference —
-it never re-traces or re-compiles, which is the R3 guarantee on this
-substrate.  The two-phase FreeRTOS barrier becomes
-``core/barrier.py``'s quiesce -> swap protocol (block on in-flight
-device work, agree across hosts, then swap).
+      q8_8  <  q16_16  <  q8_24  <  f32
+
+  ``Mode.FAST`` / ``Mode.PRECISE`` remain as compat aliases for
+  ``q16_16`` / ``f32`` — every pre-ladder caller keeps working (R1).
+
+* **Per-level op tables** — ops register implementations for any
+  subset of levels; a level without its own implementation of an op
+  resolves to the nearest *more precise* level that has one (then the
+  nearest less precise), so every op is callable at every level.
+
+* **PrecisionPolicy** — an op -> level override map on top of the
+  engine's current level, so trig can run ``q8_24`` while matmul stays
+  ``q16_16`` inside one context.
+
+* **Scoped dispatch** — ``with engine.at(level_or_policy):`` switches
+  through the two-phase barrier on entry and restores on exit;
+  contexts are prebuilt and cached, so entry/exit stay O(1)
+  reference swaps (R3).
+
+* **jit-safe functional dispatch** — ``engine.switched(op)`` returns a
+  branch table closed over every level's implementation, dispatched by
+  a *traced* level index via ``jax.lax.switch``.  A jit-compiled step
+  that takes the index as an argument changes levels with ZERO
+  retraces — the R3 guarantee *inside* compiled code, where a Python
+  reference swap cannot reach.
+
+The paper's requirements, restated for the ladder:
+
+* R1 (API stability)       — call sites never change across levels;
+* R2 (zero-cost abstraction)— no per-op dispatch overhead in steady state;
+* R3 (O(1) switch latency) — reference swap (host) / traced index (jit);
+* R4 (RTOS compatibility)  — the two-phase barrier guards every swap.
+
+JAX adaptation: "function pointers" become ahead-of-time compiled
+executables.  ``jax.jit(fn).lower(specs).compile()`` runs once per
+(op, level) at engine init; ``set_level`` then swaps a dict reference —
+it never re-traces or re-compiles.  The two-phase FreeRTOS barrier
+becomes ``core/barrier.py``'s quiesce -> swap protocol.
 """
 
 from __future__ import annotations
 
+import contextlib
 import enum
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+from functools import partial
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 
 from repro.core.barrier import TwoPhaseBarrier
+from repro.core.qformat import Q8_8, Q8_24, Q16_16, QFormat
 
-__all__ = ["Mode", "OP_SET", "PrecisionContext", "MathEngine", "SwitchStats"]
+__all__ = [
+    "Mode",
+    "OP_SET",
+    "PrecisionLevel",
+    "PrecisionPolicy",
+    "PrecisionContext",
+    "MathEngine",
+    "SwitchStats",
+    "register_level",
+    "level",
+    "ladder",
+    "ladder_names",
+    "resolve_level",
+    "MODE_ALIASES",
+]
 
 
 class Mode(str, enum.Enum):
-    """Paper §4.2: m in {FAST, PRECISE}."""
+    """Paper §4.2: m in {FAST, PRECISE} — retained as compat aliases
+    into the ladder (FAST = q16_16, PRECISE = f32)."""
 
     FAST = "fast"          # Q-format integer path (f^Q)
     PRECISE = "precise"    # IEEE 754 path (f^F)
 
 
 #: The paper's operation set F (Eq. 19) — six ops — extended with the
-#: universal-CORDIC transcendental family (Walther modes: circular and
-#: hyperbolic vectoring, hyperbolic rotation, linear division).  The
-#: framework registers more (train_step, prefill_step, serve_step), but
-#: these always exist.
+#: universal-CORDIC transcendental family (Walther modes) and the
+#: linear-vectoring division.  The framework registers more
+#: (train_step, prefill_step, serve_step), but these always exist.
 OP_SET = (
     "mul", "add", "sub", "sin", "cos", "matmul",
-    "atan2", "sqrt", "exp", "log", "tanh", "sigmoid",
+    "atan2", "sqrt", "exp", "log", "tanh", "sigmoid", "div",
 )
+
+
+# ---------------------------------------------------------------------------
+# level registry (the ladder)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PrecisionLevel:
+    """One rung of the ladder: a name bound to a number representation.
+
+    ``qformat`` set  -> fixed-point level (f^Q family);
+    ``qformat`` None -> float level with ``dtype`` (f^F family).
+    """
+
+    name: str
+    qformat: Optional[QFormat] = None
+    dtype: Any = None
+    description: str = ""
+
+    @property
+    def is_fixed(self) -> bool:
+        return self.qformat is not None
+
+    @property
+    def mode(self) -> Mode:
+        """Compat projection onto the paper's binary space."""
+        return Mode.FAST if self.is_fixed else Mode.PRECISE
+
+    def __repr__(self):  # pragma: no cover - cosmetic
+        rep = repr(self.qformat) if self.is_fixed else str(self.dtype)
+        return f"PrecisionLevel({self.name}: {rep})"
+
+
+#: insertion order IS the ladder order: cheapest -> most precise.
+_LEVELS: Dict[str, PrecisionLevel] = {}
+
+#: Mode -> level-name compat aliases (paper R1).
+MODE_ALIASES: Dict[Mode, str] = {Mode.FAST: "q16_16", Mode.PRECISE: "f32"}
+
+
+def register_level(lvl: PrecisionLevel, *, index: Optional[int] = None) -> PrecisionLevel:
+    """Add (or replace) a named level.  ``index`` inserts mid-ladder;
+    default appends at the precise end."""
+    if lvl.name in _LEVELS:
+        _LEVELS[lvl.name] = lvl
+        return lvl
+    if index is None:
+        _LEVELS[lvl.name] = lvl
+        return lvl
+    items = list(_LEVELS.items())
+    items.insert(index, (lvl.name, lvl))
+    _LEVELS.clear()
+    _LEVELS.update(items)
+    return lvl
+
+
+def level(name: str) -> PrecisionLevel:
+    return _LEVELS[name]
+
+
+def ladder() -> Tuple[PrecisionLevel, ...]:
+    """All registered levels, cheapest first."""
+    return tuple(_LEVELS.values())
+
+
+def ladder_names() -> Tuple[str, ...]:
+    return tuple(_LEVELS)
+
+
+LevelSpec = Union["PrecisionLevel", Mode, str]
+
+
+def resolve_level(spec: LevelSpec) -> PrecisionLevel:
+    """Canonicalize a level spec: PrecisionLevel | Mode | level name |
+    mode-value string ('fast'/'precise')."""
+    if isinstance(spec, PrecisionLevel):
+        return spec
+    if isinstance(spec, Mode):
+        return _LEVELS[MODE_ALIASES[spec]]
+    if isinstance(spec, str):
+        if spec in _LEVELS:
+            return _LEVELS[spec]
+        try:
+            return _LEVELS[MODE_ALIASES[Mode(spec)]]
+        except ValueError:
+            raise KeyError(
+                f"unknown precision level {spec!r}; have {ladder_names()}"
+            ) from None
+    raise TypeError(f"cannot resolve precision level from {spec!r}")
+
+
+# the default ladder
+register_level(PrecisionLevel("q8_8", qformat=Q8_8, description="int16 activations"))
+register_level(PrecisionLevel("q16_16", qformat=Q16_16, description="paper Q16.16"))
+register_level(PrecisionLevel("q8_24", qformat=Q8_24, description="high-precision angle"))
+register_level(PrecisionLevel("f32", dtype="float32", description="IEEE 754 binary32"))
+
+
+# ---------------------------------------------------------------------------
+# per-op policy
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PrecisionPolicy:
+    """op -> level overrides on top of a default level.
+
+    ``default`` None means "the engine's current level" — the policy
+    then only pins the listed ops.  Hashable (context-cache key), so
+    ``per_op`` is normalized to a sorted tuple at construction.
+    """
+
+    default: Optional[str] = None
+    per_op: Tuple[Tuple[str, str], ...] = ()
+
+    def __post_init__(self):
+        if self.default is not None:
+            object.__setattr__(self, "default", resolve_level(self.default).name)
+        if isinstance(self.per_op, Mapping):
+            items = self.per_op.items()
+        else:
+            items = self.per_op
+        norm = tuple(sorted((op, resolve_level(lv).name) for op, lv in items))
+        object.__setattr__(self, "per_op", norm)
+
+    def level_for(self, op: str, fallback: str) -> str:
+        for name, lv in self.per_op:
+            if name == op:
+                return lv
+        return self.default if self.default is not None else fallback
+
+    def __contains__(self, op: str) -> bool:
+        return any(name == op for name, _ in self.per_op)
+
+
+# ---------------------------------------------------------------------------
+# immutable context
+# ---------------------------------------------------------------------------
 
 
 class PrecisionContext:
@@ -60,10 +248,14 @@ class PrecisionContext:
     produces a NEW context; the engine swaps which one is current.
     """
 
-    __slots__ = ("mode", "_table")
+    __slots__ = ("level", "mode", "policy", "_table")
 
-    def __init__(self, mode: Mode, table: Mapping[str, Callable]):
-        object.__setattr__(self, "mode", mode)
+    def __init__(self, lvl: LevelSpec, table: Mapping[str, Callable],
+                 policy: Optional[PrecisionPolicy] = None):
+        lvl = resolve_level(lvl)
+        object.__setattr__(self, "level", lvl)
+        object.__setattr__(self, "mode", lvl.mode)
+        object.__setattr__(self, "policy", policy)
         object.__setattr__(self, "_table", dict(table))
 
     def __setattr__(self, *_):  # pragma: no cover - guard
@@ -91,23 +283,42 @@ class SwitchStats:
     history: list = field(default_factory=list)
 
 
-class MathEngine:
-    """Paper §4.4 public API: ``init(mode)``, ``setMode(mode)``, ``ctx()``.
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
 
-    Ops are registered per mode, either as plain callables (host math,
+
+class MathEngine:
+    """Paper §4.4 public API, ladder edition.
+
+    Compat surface (unchanged): ``init(mode)``, ``set_mode(mode)``,
+    ``ctx()``, ``call(op, *args)``, ``register(op, fast=..., precise=...)``.
+
+    Ladder surface: ``set_level(level)``, ``with engine.at(level):``,
+    ``set_policy(policy)``, ``register(op, q8_24=..., f32=...)``,
+    ``switched(op)`` + ``level_index()`` for jit-safe dispatch.
+
+    Ops are registered per level, either as plain callables (host math,
     already-jitted functions) or as AOT-compiled executables built by
-    :meth:`compile_op`.  ``set_mode`` runs the two-phase barrier and
+    :meth:`compile_op`.  Every switch runs the two-phase barrier and
     swaps one reference — measured in microseconds in
-    ``benchmarks/bench_switch.py``, mirroring the paper's 8.09 us.
+    ``benchmarks/bench_paper_tables.py``, mirroring the paper's 8.09 us.
     """
 
-    def __init__(self, mode: Mode = Mode.PRECISE, *, barrier: Optional[TwoPhaseBarrier] = None):
-        self._impls: Dict[str, Dict[Mode, Callable]] = {}
-        self._contexts: Dict[Mode, PrecisionContext] = {}
-        self._mode = Mode(mode)
+    def __init__(
+        self,
+        level: LevelSpec = Mode.PRECISE,
+        *,
+        barrier: Optional[TwoPhaseBarrier] = None,
+        policy: Optional[PrecisionPolicy] = None,
+    ):
+        self._impls: Dict[str, Dict[str, Callable]] = {}
+        self._contexts: Dict[Any, PrecisionContext] = {}
+        self._level = resolve_level(level)
+        self._policy = policy
         self._ctx: Optional[PrecisionContext] = None
         self._barrier = barrier or TwoPhaseBarrier()
-        self._lock = threading.Lock()
+        self._lock = threading.RLock()
         self._inflight: Any = None  # last dispatched device result (quiesce target)
         self.switch_stats = SwitchStats()
         self._default_ops()
@@ -115,95 +326,223 @@ class MathEngine:
     # -- registration -----------------------------------------------------
 
     def _default_ops(self):
-        """Install the paper's F set with both paths."""
+        """Install the paper's F set across the default ladder."""
         import jax.numpy as jnp
 
         from repro.core import cordic, linalg, qformat
 
-        self.register("mul", fast=qformat.q_mul, precise=lambda a, b: a * b)
-        self.register("add", fast=qformat.q_add, precise=lambda a, b: a + b)
-        self.register("sub", fast=qformat.q_sub, precise=lambda a, b: a - b)
-        self.register("sin", fast=lambda t: cordic.cordic_sincos(t)[0], precise=jnp.sin)
-        self.register("cos", fast=lambda t: cordic.cordic_sincos(t)[1], precise=jnp.cos)
-        self.register("matmul", fast=linalg.qmatmul_deferred, precise=linalg.matmul_float)
+        self.register(
+            "mul",
+            q8_8=partial(qformat.q_mul, frac_bits=8),
+            q16_16=qformat.q_mul,
+            q8_24=partial(qformat.q_mul, frac_bits=24),
+            f32=lambda a, b: a * b,
+        )
+        self.register("add", q16_16=qformat.q_add, f32=lambda a, b: a + b)
+        self.register("sub", q16_16=qformat.q_sub, f32=lambda a, b: a - b)
+        self.register(
+            "sin",
+            q16_16=lambda t: cordic.cordic_sincos(t)[0],
+            q8_24=lambda t: cordic.cordic_sincos24(t)[0],
+            f32=jnp.sin,
+        )
+        self.register(
+            "cos",
+            q16_16=lambda t: cordic.cordic_sincos(t)[1],
+            q8_24=lambda t: cordic.cordic_sincos24(t)[1],
+            f32=jnp.cos,
+        )
+        self.register("matmul", q16_16=linalg.qmatmul_deferred, f32=linalg.matmul_float)
         # universal-CORDIC transcendental family (float boundaries on the
-        # FAST path, same call signature in both modes — R1)
-        self.register("atan2", fast=cordic.cordic_atan2, precise=jnp.arctan2)
-        self.register("sqrt", fast=cordic.cordic_sqrt, precise=jnp.sqrt)
-        self.register("exp", fast=cordic.cordic_exp, precise=jnp.exp)
-        self.register("log", fast=cordic.cordic_log, precise=jnp.log)
-        self.register("tanh", fast=cordic.cordic_tanh, precise=jnp.tanh)
-        self.register("sigmoid", fast=cordic.cordic_sigmoid, precise=jax.nn.sigmoid)
+        # fixed-point paths, same call signature at every level — R1)
+        self.register(
+            "atan2",
+            q16_16=cordic.cordic_atan2,
+            q8_24=cordic.cordic_atan2_24,
+            f32=jnp.arctan2,
+        )
+        self.register("sqrt", q16_16=cordic.cordic_sqrt, f32=jnp.sqrt)
+        self.register("exp", q16_16=cordic.cordic_exp, f32=jnp.exp)
+        self.register("log", q16_16=cordic.cordic_log, f32=jnp.log)
+        self.register("tanh", q16_16=cordic.cordic_tanh, f32=jnp.tanh)
+        self.register("sigmoid", q16_16=cordic.cordic_sigmoid, f32=jax.nn.sigmoid)
+        self.register("div", q16_16=cordic.cordic_div, f32=lambda a, b: a / b)
 
-    def register(self, name: str, *, fast: Callable, precise: Callable) -> None:
-        self._impls[name] = {Mode.FAST: fast, Mode.PRECISE: precise}
+    def register(
+        self,
+        name: str,
+        *,
+        fast: Optional[Callable] = None,
+        precise: Optional[Callable] = None,
+        **level_impls: Callable,
+    ) -> None:
+        """Register per-level implementations of an op.
+
+        Compat kwargs: ``fast`` -> q16_16, ``precise`` -> f32.  Any
+        level name is accepted as a keyword (``q8_24=fn``).  The op's
+        previous registration is replaced wholesale.
+        """
+        table: Dict[str, Callable] = {}
+        if fast is not None:
+            table[MODE_ALIASES[Mode.FAST]] = fast
+        if precise is not None:
+            table[MODE_ALIASES[Mode.PRECISE]] = precise
+        for lv, fn in level_impls.items():
+            table[resolve_level(lv).name] = fn
+        if not table:
+            raise ValueError(f"register({name!r}): no implementations given")
+        self._impls[name] = table
         self._contexts.clear()  # contexts are rebuilt lazily
+        self._ctx = None
 
-    def compile_op(self, name: str, impls: Dict[Mode, Callable], *example_args, **lower_kw) -> None:
-        """AOT-compile both paths NOW so set_mode never compiles.
+    def compile_op(
+        self, name: str, impls: Dict[LevelSpec, Callable], *example_args, **lower_kw
+    ) -> None:
+        """AOT-compile every path NOW so set_level never compiles.
 
-        ``example_args`` may be ShapeDtypeStructs (no allocation) or
-        concrete arrays; ``lower_kw`` forwards in_shardings etc.
+        ``impls`` keys may be Modes or level names.  ``example_args``
+        may be ShapeDtypeStructs (no allocation) or concrete arrays;
+        ``lower_kw`` forwards in_shardings etc.
         """
         compiled = {}
-        for mode, fn in impls.items():
+        for lv, fn in impls.items():
             jitted = fn if isinstance(fn, jax.stages.Wrapped) else jax.jit(fn, **lower_kw)
-            compiled[Mode(mode)] = jitted.lower(*example_args).compile()
+            compiled[resolve_level(lv).name] = jitted.lower(*example_args).compile()
         self._impls[name] = compiled
         self._contexts.clear()
+        self._ctx = None
+
+    # -- level/impl resolution ---------------------------------------------
+
+    def _impl_for(self, name: str, level_name: str) -> Callable:
+        """The op's implementation at a level, with ladder fallback:
+        exact level, else nearest MORE precise level with an
+        implementation (precision never silently degrades), else
+        nearest less precise."""
+        impls = self._impls[name]
+        if level_name in impls:
+            return impls[level_name]
+        names = ladder_names()
+        r = names.index(level_name)
+        for nm in names[r + 1:]:
+            if nm in impls:
+                return impls[nm]
+        for nm in reversed(names[:r]):
+            if nm in impls:
+                return impls[nm]
+        raise KeyError(f"op {name!r} has no implementation reachable from level {level_name!r}")
+
+    def _context_for(self, level_name: str, policy: Optional[PrecisionPolicy]) -> PrecisionContext:
+        key = (level_name, policy)
+        if key not in self._contexts:
+            table = {
+                name: self._impl_for(
+                    name,
+                    policy.level_for(name, level_name) if policy is not None else level_name,
+                )
+                for name in self._impls
+            }
+            self._contexts[key] = PrecisionContext(level(level_name), table, policy)
+        return self._contexts[key]
 
     # -- paper API ---------------------------------------------------------
 
-    def init(self, mode: Mode) -> "MathEngine":
-        self._mode = Mode(mode)
+    def init(self, level: LevelSpec) -> "MathEngine":
+        self._level = resolve_level(level)
         self._ctx = None
         return self
 
     def ctx(self) -> PrecisionContext:
         """Paper: MathEngine::ctx() — the active context."""
-        if self._ctx is None or self._ctx.mode is not self._mode:
-            self._ctx = self._context_for(self._mode)
+        if self._ctx is None or (self._ctx.level is not self._level or self._ctx.policy != self._policy):
+            self._ctx = self._context_for(self._level.name, self._policy)
         return self._ctx
-
-    def _context_for(self, mode: Mode) -> PrecisionContext:
-        if mode not in self._contexts:
-            table = {name: impls[mode] for name, impls in self._impls.items() if mode in impls}
-            self._contexts[mode] = PrecisionContext(mode, table)
-        return self._contexts[mode]
 
     @property
     def mode(self) -> Mode:
-        return self._mode
+        """Compat: the binary projection of the current level."""
+        return self._level.mode
 
-    def set_mode(self, mode: Mode) -> float:
+    @property
+    def level(self) -> PrecisionLevel:
+        return self._level
+
+    @property
+    def policy(self) -> Optional[PrecisionPolicy]:
+        return self._policy
+
+    def set_mode(self, mode: LevelSpec) -> float:
+        """Compat alias for :meth:`set_level` (paper §4.4 setMode)."""
+        return self.set_level(mode)
+
+    def set_level(self, spec: LevelSpec) -> float:
         """Two-phase transition (paper §4.3.1). Returns latency in us.
 
         Phase 1 (quiesce): wait for the in-flight device step and reach
         cross-host agreement.  Phase 2 (swap): reassign the context
-        reference.  Both contexts are prebuilt/precompiled, so phase 2
-        is a single reference assignment — O(1), no retracing.
+        reference.  Contexts are prebuilt/precompiled and cached, so
+        phase 2 is a single reference assignment — O(1), no retracing.
         """
-        mode = Mode(mode)
+        target_level = resolve_level(spec)
         with self._lock:
-            if mode is self._mode:
+            if target_level is self._level:
                 return 0.0
             # Prebuild the target context OUTSIDE the timed swap (it is
             # cached after the first build; compile_op users pay nothing).
-            target = self._context_for(mode)
+            target = self._context_for(target_level.name, self._policy)
+            return self._swap(lambda: (
+                setattr(self, "_level", target_level),
+                setattr(self, "_ctx", target),
+            ), tag=target_level.name)
 
-            def swap():
-                self._mode = mode
-                self._ctx = target
+    def set_policy(self, policy: Optional[PrecisionPolicy]) -> float:
+        """Swap the per-op policy through the same two-phase barrier.
+        Structurally equal policies are a free no-op (PrecisionPolicy
+        normalizes to sorted tuples, so == is the table-identity test)."""
+        with self._lock:
+            if policy == self._policy:
+                return 0.0
+            target = self._context_for(self._level.name, policy)
+            return self._swap(lambda: (
+                setattr(self, "_policy", policy),
+                setattr(self, "_ctx", target),
+            ), tag=f"policy:{policy!r}")
 
-            t0 = time.perf_counter()
-            self._barrier.transition(inflight=self._inflight, swap_fn=swap)
-            latency_us = (time.perf_counter() - t0) * 1e6
-            s = self.switch_stats
-            s.count += 1
-            s.last_latency_us = latency_us
-            s.total_latency_us += latency_us
-            s.history.append((mode.value, latency_us))
-            return latency_us
+    def _swap(self, swap_fn: Callable[[], Any], tag: str) -> float:
+        t0 = time.perf_counter()
+        self._barrier.transition(inflight=self._inflight, swap_fn=swap_fn)
+        latency_us = (time.perf_counter() - t0) * 1e6
+        s = self.switch_stats
+        s.count += 1
+        s.last_latency_us = latency_us
+        s.total_latency_us += latency_us
+        s.history.append((tag, latency_us))
+        return latency_us
+
+    @contextlib.contextmanager
+    def at(self, spec: Union[LevelSpec, PrecisionPolicy]):
+        """Scoped dispatch: ``with engine.at("q8_24"): ...``.
+
+        Accepts a level (switches the whole table) or a
+        :class:`PrecisionPolicy` (overrides per-op levels).  Entry and
+        exit each run the two-phase barrier; nesting restores the
+        outer level/policy on exit.  Contexts are cached, so repeated
+        entry is the O(1) reference swap (R3).
+        """
+        if isinstance(spec, PrecisionPolicy):
+            prev = self._policy
+            self.set_policy(spec)
+            try:
+                yield self
+            finally:
+                self.set_policy(prev)
+        else:
+            prev = self._level
+            self.set_level(spec)
+            try:
+                yield self
+            finally:
+                self.set_level(prev)
 
     # -- dispatch ----------------------------------------------------------
 
@@ -214,3 +553,46 @@ class MathEngine:
         out = self.ctx().op(name)(*args, **kw)
         self._inflight = out
         return out
+
+    # -- jit-safe functional dispatch --------------------------------------
+
+    def switched(
+        self, name: str, levels: Optional[Sequence[LevelSpec]] = None
+    ) -> Tuple[Callable, Tuple[str, ...]]:
+        """Build the jit-safe branch table for one op.
+
+        Returns ``(dispatch, level_names)`` where
+        ``dispatch(level_idx, *args)`` selects the implementation with
+        ``jax.lax.switch`` — ``level_idx`` may be a TRACED int32, so a
+        jit-compiled step switches levels with zero retraces.  All
+        branches are traced once at first compilation; thereafter the
+        level is data, not code.
+        """
+        names = (
+            tuple(resolve_level(lv).name for lv in levels)
+            if levels is not None
+            else ladder_names()
+        )
+        branches = [self._impl_for(name, nm) for nm in names]
+
+        def dispatch(level_idx, *args):
+            return jax.lax.switch(level_idx, branches, *args)
+
+        return dispatch, names
+
+    def level_index(self, levels: Optional[Sequence[str]] = None) -> int:
+        """Index of the current level inside ``levels`` (default: the
+        full ladder) — feed this as the traced argument of a
+        :meth:`switched` dispatch.  A current level absent from
+        ``levels`` maps to the nearest more precise entry (else the
+        most precise available), mirroring :meth:`_impl_for`."""
+        names = tuple(resolve_level(lv).name for lv in levels) if levels else ladder_names()
+        if self._level.name in names:
+            return names.index(self._level.name)
+        full = ladder_names()
+        rank = full.index(self._level.name)
+        candidates = [(full.index(nm), i) for i, nm in enumerate(names)]
+        above = [i for r, i in candidates if r > rank]
+        if above:
+            return min(above, key=lambda i: full.index(names[i]))
+        return max(range(len(names)), key=lambda i: full.index(names[i]))

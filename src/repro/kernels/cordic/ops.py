@@ -11,9 +11,13 @@ import jax.numpy as jnp
 from repro.core.cordic import HYPER_STAGES, exact_rope_phase_q16
 from repro.core.qformat import Q16_16, from_fixed, to_fixed
 from repro.kernels.cordic.cordic import cordic_kernel_call
-from repro.kernels.cordic.universal import atan2_kernel_call, universal_kernel_call
+from repro.kernels.cordic.universal import (
+    atan2_kernel_call,
+    div_kernel_call,
+    universal_kernel_call,
+)
 
-__all__ = ["sincos", "rope_tables", "atan2", "unary_op"]
+__all__ = ["sincos", "rope_tables", "atan2", "div", "unary_op"]
 
 
 @functools.partial(jax.jit, static_argnames=("iterations", "interpret"))
@@ -43,6 +47,17 @@ def atan2(y, x, iterations: int = 16, interpret: bool = True):
     """float (y, x) -> atan2 float32 through the universal Pallas kernel."""
     out_q = atan2_kernel_call(
         to_fixed(y, Q16_16), to_fixed(x, Q16_16),
+        iterations=iterations, interpret=interpret,
+    )
+    return from_fixed(out_q, Q16_16)
+
+
+@functools.partial(jax.jit, static_argnames=("iterations", "interpret"))
+def div(num, den, iterations: int = 17, interpret: bool = True):
+    """float (num, den) -> num/den float32 through the linear-vectoring
+    Pallas kernel (ROADMAP ``div_q16`` public op)."""
+    out_q = div_kernel_call(
+        to_fixed(num, Q16_16), to_fixed(den, Q16_16),
         iterations=iterations, interpret=interpret,
     )
     return from_fixed(out_q, Q16_16)

@@ -21,6 +21,7 @@ from repro.core.cordic import (
     LN2_Q16,
     PI_Q16,
     TWO_PI_Q16,
+    angle_consts,
     atan_table,
     atanh_table,
     gain_inverse,
@@ -34,16 +35,20 @@ _RAW_MAX = (1 << 31) - 1
 _RAW_MIN = -(1 << 31)
 
 
-def cordic_sincos_ref(theta_q, iterations: int = 16):
-    """theta_q: int32 array (any shape) in Q16.16. Returns (sin_q, cos_q)."""
-    table = atan_table(iterations).astype(np.int64)
-    k_inv = np.int64(gain_inverse(iterations))
+def cordic_sincos_ref(theta_q, iterations: int = 16, frac_bits: int = 16):
+    """theta_q: int32 array (any shape) in Q(m.n). Returns (sin_q, cos_q)."""
+    table = atan_table(iterations, frac_bits).astype(np.int64)
+    k_inv = np.int64(gain_inverse(iterations, frac_bits))
+    pi_q, half_pi_q, two_pi_q = angle_consts(frac_bits)
 
     t = np.asarray(theta_q, np.int64)
-    r = np.remainder(t + PI_Q16, TWO_PI_Q16) - PI_Q16  # floor-mod, like jnp
-    hi = r > HALF_PI_Q16
-    lo = r < -HALF_PI_Q16
-    z = np.where(hi, r - PI_Q16, np.where(lo, r + PI_Q16, r))
+    # floor-mod like jnp — but through int32 wrap-around at the +pi bias,
+    # matching the device datapath exactly
+    biased = ((t + pi_q + 2**31) % 2**32) - 2**31
+    r = np.remainder(biased, two_pi_q) - pi_q
+    hi = r > half_pi_q
+    lo = r < -half_pi_q
+    z = np.where(hi, r - pi_q, np.where(lo, r + pi_q, r))
     negate = hi | lo
 
     x = np.full_like(z, k_inv)
@@ -139,10 +144,35 @@ def _linear_div_q16(num, den, iterations=17):
     return z
 
 
-def atan2_ref(y_q, x_q, iterations=16):
+def div_ref(num_q, den_q, iterations=17):
+    """Full-range linear-vectoring division oracle (mirrors
+    ``repro.core.cordic.div_q16_body`` in int64)."""
+    num = _clamp_raw(num_q)
+    den = _clamp_raw(den_q)
+    an = np.abs(num)
+    ad = np.abs(den)
+    bn = _ilog2(np.maximum(an, 1))
+    bd = _ilog2(np.maximum(ad, 1))
+    nn = _shift_signed(an, bn - _HFRAC)
+    dd = _shift_signed(ad, bd - _HFRAC)
+    z = _linear_div_q16(nn, np.maximum(dd, 1), iterations)
+    e = bn - bd
+    zr = _round_shift_right(z, np.maximum(-e, 0))
+    sl = np.maximum(e, 0)
+    fits = zr <= (_RAW_MAX >> sl)
+    mag = np.where(fits, zr << sl, _RAW_MAX)
+    out = np.where((num < 0) != (den < 0), -mag, mag)
+    sat = np.where(num > 0, _RAW_MAX, _RAW_MIN + 1)
+    return np.where(
+        np.asarray(den_q, np.int64) == 0, np.where(num == 0, 0, sat), out
+    ).astype(np.int32)
+
+
+def atan2_ref(y_q, x_q, iterations=16, frac_bits=16):
     y0 = _clamp_raw(y_q)
     x0 = _clamp_raw(x_q)
-    table = atan_table(iterations)
+    table = atan_table(iterations, frac_bits)
+    pi_q = angle_consts(frac_bits)[0]
 
     neg_x = x0 < 0
     x1 = np.where(neg_x, -x0, x0)
@@ -165,7 +195,7 @@ def atan2_ref(y_q, x_q, iterations=16):
             np.where(neg, z - t, z + t),
         )
 
-    half_turn = np.where(y0 < 0, -PI_Q16, PI_Q16)
+    half_turn = np.where(y0 < 0, -pi_q, pi_q)
     out = np.where(neg_x, z + half_turn, z)
     return np.where((x0 == 0) & (y0 == 0), 0, out).astype(np.int32)
 

@@ -25,6 +25,7 @@ from jax.experimental import pallas as pl
 from repro.core.cordic import (
     HYPER_STAGES,
     atan2_q16_body,
+    div_q16_body,
     exp_q16_body,
     log_q16_body,
     sigmoid_q16_body,
@@ -34,7 +35,7 @@ from repro.core.cordic import (
 from repro.compat import CompilerParams
 from repro.kernels.cordic.cordic import DEFAULT_BLOCK_ROWS, LANE
 
-__all__ = ["UNARY_OPS", "universal_kernel_call", "atan2_kernel_call"]
+__all__ = ["UNARY_OPS", "universal_kernel_call", "atan2_kernel_call", "div_kernel_call"]
 
 #: op name -> elementwise Q16.16 body (shared with repro.core.cordic)
 UNARY_OPS = {
@@ -50,8 +51,12 @@ def _unary_kernel(in_ref, out_ref, *, op: str, stages: int):
     out_ref[...] = UNARY_OPS[op](in_ref[...], stages)
 
 
-def _atan2_kernel(y_ref, x_ref, out_ref, *, iterations: int):
-    out_ref[...] = atan2_q16_body(y_ref[...], x_ref[...], iterations)
+def _atan2_kernel(y_ref, x_ref, out_ref, *, iterations: int, frac_bits: int):
+    out_ref[...] = atan2_q16_body(y_ref[...], x_ref[...], iterations, frac_bits)
+
+
+def _div_kernel(num_ref, den_ref, out_ref, *, iterations: int):
+    out_ref[...] = div_q16_body(num_ref[...], den_ref[...], iterations)
 
 
 def _blocked_call(kernel, inputs, *, block_rows: int, interpret: bool):
@@ -98,15 +103,35 @@ def universal_kernel_call(
     return _blocked_call(kernel, [w_q], block_rows=block_rows, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("iterations", "block_rows", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("iterations", "frac_bits", "block_rows", "interpret")
+)
 def atan2_kernel_call(
     y_q,
     x_q,
     *,
     iterations: int = 16,
+    frac_bits: int = 16,
     block_rows: int = DEFAULT_BLOCK_ROWS,
     interpret: bool = True,
 ):
-    """atan2(y, x) on Q16.16 int32 arrays of any (matching) shape."""
-    kernel = functools.partial(_atan2_kernel, iterations=iterations)
+    """atan2(y, x) on Q(m.n) int32 arrays of any (matching) shape.
+    ``frac_bits`` selects the output angle format (24 = the Q8.24
+    ladder rung; operands are scale-invariant)."""
+    kernel = functools.partial(_atan2_kernel, iterations=iterations, frac_bits=frac_bits)
     return _blocked_call(kernel, [y_q, x_q], block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("iterations", "block_rows", "interpret"))
+def div_kernel_call(
+    num_q,
+    den_q,
+    *,
+    iterations: int = 17,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """Full-range linear-vectoring division num/den on Q16.16 int32
+    arrays (div(0, 0) = 0, so the zero tail padding is safe)."""
+    kernel = functools.partial(_div_kernel, iterations=iterations)
+    return _blocked_call(kernel, [num_q, den_q], block_rows=block_rows, interpret=interpret)

@@ -19,6 +19,9 @@ __all__ = [
     "init_from_specs",
     "rms_norm",
     "softcap",
+    "ptanh",
+    "psigmoid",
+    "psilu",
     "pdot",
     "dot_fast_int8",
     "rope_tables",
@@ -87,11 +90,85 @@ def rms_norm(x, weight, eps: float = 1e-5):
     return (out * (1.0 + weight.astype(jnp.float32))).astype(dtype)
 
 
-def softcap(x, cap: Optional[float]):
-    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+# ---------------------------------------------------------------------------
+# precision-dispatched activations: 𝒟[tanh] / 𝒟[sigmoid] inside models
+# ---------------------------------------------------------------------------
+#
+# The FAST paths run the universal-CORDIC Q16.16 forward (core/cordic)
+# with an analytic-derivative straight-through backward — the same
+# custom_vjp pattern as dot_fast_int8 below, so FAST training steps stay
+# differentiable even though the forward is integer shift-add.
+
+
+@jax.custom_vjp
+def _tanh_fast(x):
+    from repro.core.cordic import cordic_tanh
+
+    return cordic_tanh(x)
+
+
+def _tanh_fast_fwd(x):
+    y = _tanh_fast(x)
+    return y, y
+
+
+def _tanh_fast_bwd(y, g):
+    return (g * (1.0 - y * y),)
+
+
+_tanh_fast.defvjp(_tanh_fast_fwd, _tanh_fast_bwd)
+
+
+@jax.custom_vjp
+def _sigmoid_fast(x):
+    from repro.core.cordic import cordic_sigmoid
+
+    return cordic_sigmoid(x)
+
+
+def _sigmoid_fast_fwd(x):
+    y = _sigmoid_fast(x)
+    return y, y
+
+
+def _sigmoid_fast_bwd(y, g):
+    return (g * y * (1.0 - y),)
+
+
+_sigmoid_fast.defvjp(_sigmoid_fast_fwd, _sigmoid_fast_bwd)
+
+
+def ptanh(x, mode: str = "precise"):
+    """𝒟[tanh]: FAST -> Q16.16 CORDIC (|eps| <= 6e-5, STE backward);
+    PRECISE -> IEEE-754.  Inputs are expected in f32."""
+    if mode == "fast":
+        return _tanh_fast(x)
+    return jnp.tanh(x)
+
+
+def psigmoid(x, mode: str = "precise"):
+    """𝒟[sigmoid]: FAST -> Q16.16 CORDIC (|eps| <= 5e-5, STE backward)."""
+    if mode == "fast":
+        return _sigmoid_fast(x)
+    return jax.nn.sigmoid(x)
+
+
+def psilu(x, mode: str = "precise"):
+    """𝒟[silu]: x * sigmoid(x) with the sigmoid precision-dispatched;
+    the product rule composes with the sigmoid STE under autodiff."""
+    if mode == "fast":
+        return x * _sigmoid_fast(x)
+    return jax.nn.silu(x)
+
+
+def softcap(x, cap: Optional[float], mode: str = "precise"):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap), with the tanh
+    precision-dispatched.  Attention-*score* capping call sites stay
+    PRECISE by policy (like rms_norm: tiny f32 internals where a
+    format boundary would cost more than it saves)."""
     if cap is None:
         return x
-    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+    return (cap * ptanh(x.astype(jnp.float32) / cap, mode)).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -236,5 +313,5 @@ def swiglu_mlp(params, x, mode: str = "precise", eps: float = 1e-5):
     h = rms_norm(x, params["norm"], eps)
     gate = pdot(h, params["w_gate"], mode)
     up = pdot(h, params["w_up"], mode)
-    act = jax.nn.silu(gate.astype(jnp.float32)).astype(up.dtype) * up
+    act = psilu(gate.astype(jnp.float32), mode).astype(up.dtype) * up
     return pdot(act, params["w_down"], mode)

@@ -126,7 +126,8 @@ def _lm_head(params, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 
-def _chunked_ce(hidden, head, labels, mask, cfg: ModelConfig, chunk: int = 256):
+def _chunked_ce(hidden, head, labels, mask, cfg: ModelConfig, chunk: int = 256,
+                mode: str = "precise"):
     """hidden (B,S,d), head (d,V), labels (B,S) -> (sum_loss, sum_zloss, count).
 
     Scans sequence chunks; the (B, chunk, V) logits are transient.
@@ -151,7 +152,7 @@ def _chunked_ce(hidden, head, labels, mask, cfg: ModelConfig, chunk: int = 256):
             h.astype(jnp.bfloat16), head.astype(jnp.bfloat16),
             preferred_element_type=jnp.float32,
         )
-        logits = softcap(logits, cfg.final_softcap)
+        logits = softcap(logits, cfg.final_softcap, mode)
         lse = jax.scipy.special.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
         ce = (lse - gold) * m
@@ -186,7 +187,7 @@ def train_loss(
     x, aux = _backbone_train(params, x, cfg, positions, mode, constrain, remat)
     x = rms_norm(x, params["final_norm"], cfg.rms_eps)
 
-    loss_s, z_s, cnt = _chunked_ce(x, _lm_head(params, cfg), labels, mask, cfg)
+    loss_s, z_s, cnt = _chunked_ce(x, _lm_head(params, cfg), labels, mask, cfg, mode=mode)
     ce = loss_s / jnp.maximum(cnt, 1.0)
     z_loss = z_coef * z_s / jnp.maximum(cnt, 1.0)
     loss = ce + z_loss
@@ -257,7 +258,7 @@ def prefill_step(
         _lm_head(params, cfg).astype(jnp.bfloat16),
         preferred_element_type=jnp.float32,
     )
-    return softcap(logits, cfg.final_softcap), new_caches
+    return softcap(logits, cfg.final_softcap, mode), new_caches
 
 
 def decode_step(
@@ -280,4 +281,4 @@ def decode_step(
         _lm_head(params, cfg).astype(jnp.bfloat16),
         preferred_element_type=jnp.float32,
     )
-    return softcap(logits, cfg.final_softcap), new_caches
+    return softcap(logits, cfg.final_softcap, mode), new_caches

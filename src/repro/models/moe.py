@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models.layers import Spec, attn_norm_spec, pdot, rms_norm
+from repro.models.layers import Spec, attn_norm_spec, pdot, psilu, rms_norm
 
 __all__ = ["moe_specs", "moe_forward"]
 
@@ -112,7 +112,7 @@ def moe_forward(
     dt = jnp.bfloat16
     gate = jnp.einsum("becd,edf->becf", xe.astype(dt), params["w_gate"].astype(dt))
     up = jnp.einsum("becd,edf->becf", xe.astype(dt), params["w_up"].astype(dt))
-    act = jax.nn.silu(gate.astype(jnp.float32)).astype(dt) * up
+    act = psilu(gate.astype(jnp.float32), mode).astype(dt) * up
     ye = constrain(jnp.einsum("becf,efd->becd", act, params["w_down"].astype(dt)), "moe4d")
 
     # ---- combine: scatter-add with gate weights ------------------------------

@@ -1,27 +1,32 @@
-"""Batched serving runtime: prefill + decode with precision modes.
+"""Batched serving runtime: prefill + decode on the precision ladder.
 
 Static batching: up to ``max_batch`` prompts are padded to a common
 length, prefilled together, then decoded lock-step until ``max_new``
 or EOS.  The decode step dispatches through the MathEngine, so a
-server can switch FAST (int8 matmuls + Q-format KV) <-> PRECISE at
-request-boundary safety via the two-phase barrier — the paper's
-envelope-based mode choice (§7.2) applied to serving.
+server can move along the ladder (int8 matmuls + Q-format KV at
+``q16_16`` <-> IEEE-754 at ``f32``) at request-boundary safety via the
+two-phase barrier — the paper's envelope-based mode choice (§7.2)
+applied to serving.  ``set_mode`` stays as the binary compat alias.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.precision import MathEngine, Mode
+from repro.core.precision import MathEngine, Mode, PrecisionLevel
 from repro.models import decode_step, init_caches, prefill_step
 from repro.models.config import ModelConfig
 
-__all__ = ["ServerConfig", "BatchedServer"]
+__all__ = ["ServerConfig", "BatchedServer", "SERVE_STEP_LEVELS"]
+
+#: engine levels the serve steps are implemented at -> model-layer
+#: dispatch string (models/* speak the binary vocabulary at matmul level).
+SERVE_STEP_LEVELS = (("q16_16", "fast"), ("f32", "precise"))
 
 
 @dataclasses.dataclass
@@ -31,7 +36,7 @@ class ServerConfig:
     max_new: int = 32
     eos_id: Optional[int] = None
     temperature: float = 0.0          # 0 = greedy
-    start_mode: Mode = Mode.PRECISE
+    start_mode: Any = Mode.PRECISE    # Mode compat alias or ladder level name
     seed: int = 0
 
 
@@ -56,11 +61,22 @@ class BatchedServer:
                 return decode_step(params, tok, pos, caches, cfg, mode=mode)
             return jax.jit(fn, donate_argnums=(3,))
 
-        self.engine.register("prefill", fast=make_prefill("fast"), precise=make_prefill("precise"))
-        self.engine.register("decode", fast=make_decode("fast"), precise=make_decode("precise"))
+        self.engine.register(
+            "prefill", **{lv: make_prefill(mode) for lv, mode in SERVE_STEP_LEVELS}
+        )
+        self.engine.register(
+            "decode", **{lv: make_decode(mode) for lv, mode in SERVE_STEP_LEVELS}
+        )
 
-    def set_mode(self, mode: Mode) -> float:
-        return self.engine.set_mode(mode)
+    def set_mode(self, mode: Any) -> float:
+        return self.engine.set_level(mode)
+
+    def set_level(self, level: Any) -> float:
+        return self.engine.set_level(level)
+
+    @property
+    def level(self) -> PrecisionLevel:
+        return self.engine.level
 
     def _sample(self, logits: np.ndarray, rng) -> np.ndarray:
         if self.scfg.temperature <= 0:

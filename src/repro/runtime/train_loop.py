@@ -1,11 +1,15 @@
 """Production training loop: the paper's runtime precision engine wired
-into a fault-tolerant trainer.
+into a fault-tolerant trainer, on the precision-ladder API.
 
-* both train-step executables (FAST / PRECISE) are AOT-compiled at
-  startup into a MathEngine dispatch table — mode switches mid-run are
-  the paper's O(1) pointer swap behind the two-phase barrier;
-* the PrecisionArbiter watches loss/grad-norm and triggers transitions
-  (FAST on healthy numerics, PRECISE fallback on spikes/NaNs);
+* train-step executables are registered per precision level (the
+  quantized path at ``q16_16``, the float path at ``f32``) — switches
+  mid-run are the paper's O(1) pointer swap behind the two-phase
+  barrier, or — with ``jit_switch=True`` — a *traced* level index fed
+  to one ``jax.lax.switch``-dispatched executable, so level changes
+  take effect inside the compiled step with zero retraces;
+* the PrecisionArbiter watches loss/grad-norm and recommends ladder
+  transitions (cheap levels on healthy numerics, step-up on
+  spikes/NaNs);
 * checkpoints are atomic + async (checkpoint/checkpointer.py); restart
   resumes bitwise (deterministic data keyed by step);
 * a straggler watchdog tracks a per-step wall-clock EMA and surfaces
@@ -19,20 +23,26 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.arbiter import ArbiterConfig, PrecisionArbiter
-from repro.core.precision import MathEngine, Mode
+from repro.core.precision import MathEngine, Mode, resolve_level
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import init_params, train_loss
 from repro.models.config import ModelConfig
 from repro.optim.adamw import AdamWConfig, OptState, adamw_update, init_opt_state
 
 __all__ = ["TrainerConfig", "Trainer"]
+
+#: engine levels the train step is implemented at, and the model-layer
+#: dispatch string each one lowers to (models/* pdot etc. speak the
+#: binary fast/precise vocabulary at the matmul level).
+TRAIN_STEP_LEVELS = (("q16_16", "fast"), ("f32", "precise"))
 
 
 @dataclasses.dataclass
@@ -41,9 +51,10 @@ class TrainerConfig:
     ckpt_every: int = 50
     ckpt_dir: str = "/tmp/repro_ckpt"
     log_every: int = 10
-    start_mode: Mode = Mode.PRECISE
+    start_mode: Any = Mode.PRECISE    # Mode compat alias or ladder level name
     use_arbiter: bool = False
     arbiter: ArbiterConfig = dataclasses.field(default_factory=ArbiterConfig)
+    jit_switch: bool = False          # dispatch by traced level index (no host swap)
     straggler_factor: float = 3.0     # step slower than factor x EMA -> flagged
     crash_at_step: Optional[int] = None  # failure injection (tests)
     seed: int = 0
@@ -74,7 +85,7 @@ class Trainer:
         self.data = SyntheticLM(self.data_cfg)
         self.ckpt = Checkpointer(tcfg.ckpt_dir)
         self.engine = MathEngine(tcfg.start_mode)
-        self.arbiter = PrecisionArbiter(tcfg.arbiter) if tcfg.use_arbiter else None
+        self.arbiter = self._make_arbiter(tcfg) if tcfg.use_arbiter else None
         self.history: list = []
         self.straggler_events: list = []
         self._ema_step_s: Optional[float] = None
@@ -84,10 +95,30 @@ class Trainer:
 
     # -- setup ---------------------------------------------------------------
 
+    @staticmethod
+    def _make_arbiter(tcfg: TrainerConfig) -> PrecisionArbiter:
+        """Build the arbiter with its start rung synced to the engine's
+        start level — otherwise its first recommendation would silently
+        move the engine to wherever the arbiter *believed* it was.  A
+        start level outside the arbiter's ladder is a config error, not
+        a silent demotion."""
+        acfg = tcfg.arbiter
+        start = resolve_level(tcfg.start_mode).name
+        by_level = {resolve_level(e).name: e for e in acfg.ladder}
+        if start not in by_level:
+            raise ValueError(
+                f"start_mode {tcfg.start_mode!r} (level {start}) is not in the "
+                f"arbiter ladder {acfg.ladder!r}; pass an ArbiterConfig whose "
+                f"ladder contains it"
+            )
+        if resolve_level(acfg.start_mode).name != start:
+            acfg = dataclasses.replace(acfg, start_mode=by_level[start])
+        return PrecisionArbiter(acfg)
+
     def _build_steps(self):
         cfg, opt_cfg = self.cfg, self.opt_cfg
 
-        def make(mode: str) -> Callable:
+        def make(mode: str, jit: bool = True) -> Callable:
             def step(params, opt_state, batch):
                 (loss, metrics), grads = jax.value_and_grad(
                     lambda p: train_loss(p, batch, cfg, mode=mode), has_aux=True
@@ -95,11 +126,32 @@ class Trainer:
                 params, opt_state, om = adamw_update(opt_cfg, params, grads, opt_state)
                 return params, opt_state, dict(metrics, loss=loss, **om)
 
-            return jax.jit(step, donate_argnums=(0, 1))
+            return jax.jit(step, donate_argnums=(0, 1)) if jit else step
 
-        # the dispatch table 𝒟: both paths traced/compiled up-front on
-        # first call; set_mode never re-traces (verified in tests)
-        self.engine.register("train_step", fast=make("fast"), precise=make("precise"))
+        # the dispatch table 𝒟, one executable per ladder level; each
+        # path is traced/compiled up-front on first call and set_level
+        # never re-traces (verified in tests)
+        level_names = tuple(lv for lv, _ in TRAIN_STEP_LEVELS)
+        self.engine.register(
+            "train_step",
+            **{lv: make(mode, jit=not self.tcfg.jit_switch) for lv, mode in TRAIN_STEP_LEVELS},
+        )
+        if self.tcfg.jit_switch:
+            # jit-safe functional dispatch: ONE executable whose first
+            # argument is the (traced) level index — ladder moves inside
+            # the compiled step, zero retraces (donation is off: lax.switch
+            # branches share their operands).
+            dispatch, self._switch_levels = self.engine.switched("train_step", level_names)
+            self._switched_step = jax.jit(dispatch)
+        else:
+            self._switched_step = None
+            self._switch_levels = level_names
+
+    def _run_step(self, batch):
+        if self._switched_step is not None:
+            idx = jnp.int32(self.engine.level_index(self._switch_levels))
+            return self._switched_step(idx, self.params, self.opt_state, batch)
+        return self.engine.call("train_step", self.params, self.opt_state, batch)
 
     def _init_state(self):
         latest = self.ckpt.latest_step()
@@ -127,9 +179,7 @@ class Trainer:
 
             batch = {k: jax.numpy.asarray(v) for k, v in self.data.batch(step).items()}
             t0 = time.perf_counter()
-            self.params, self.opt_state, metrics = self.engine.call(
-                "train_step", self.params, self.opt_state, batch
-            )
+            self.params, self.opt_state, metrics = self._run_step(batch)
             loss = float(metrics["loss"])
             gnorm = float(metrics["grad_norm"])
             dt = time.perf_counter() - t0
@@ -144,14 +194,15 @@ class Trainer:
 
             self.history.append(
                 {"step": step, "loss": loss, "grad_norm": gnorm,
-                 "mode": self.engine.mode.value, "dt": dt}
+                 "mode": self.engine.mode.value, "level": self.engine.level.name,
+                 "dt": dt}
             )
 
             if self.arbiter is not None:
                 rec = self.arbiter.observe(step, loss, gnorm)
                 if rec is not None:
-                    latency = self.engine.set_mode(rec)
-                    self.history[-1]["switched_to"] = rec.value
+                    latency = self.engine.set_level(rec)
+                    self.history[-1]["switched_to"] = getattr(rec, "value", rec)
                     self.history[-1]["switch_us"] = latency
 
             if t.ckpt_every and (step + 1) % t.ckpt_every == 0:

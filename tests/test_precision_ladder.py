@@ -1,0 +1,540 @@
+"""Precision-ladder API validation: level registry/ordering, compat
+aliases (R1), per-op policies, scoped ``engine.at`` dispatch, jit-safe
+``lax.switch`` dispatch with zero retraces, multi-tier arbiter
+hysteresis, Q8.24 CORDIC datapaths, and the public ``div_q16`` op."""
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import cordic as cd
+from repro.core.arbiter import ArbiterConfig, PrecisionArbiter
+from repro.core.precision import (
+    MODE_ALIASES,
+    MathEngine,
+    Mode,
+    PrecisionLevel,
+    PrecisionPolicy,
+    ladder,
+    ladder_names,
+    resolve_level,
+)
+from repro.core.qformat import Q8_24, Q16_16, from_fixed, to_fixed
+
+ONE24 = 1 << 24
+
+
+def q24(x):
+    return np.round(np.asarray(x, np.float64) * ONE24).astype(np.int32)
+
+
+def f24(v):
+    return np.asarray(v, np.int64) / ONE24
+
+
+# ---------------------------------------------------------------------------
+# registry and ordering
+# ---------------------------------------------------------------------------
+
+
+def test_default_ladder_order():
+    names = ladder_names()
+    # cheapest -> most precise; the compat aliases bracket the middle
+    assert names.index("q8_8") < names.index("q16_16") < names.index("q8_24") < names.index("f32")
+    for lvl in ladder():
+        assert (lvl.qformat is not None) == lvl.is_fixed
+
+
+def test_register_level_ordering_and_engine_pickup():
+    """A level registered mid-ladder lands at the requested rank and is
+    immediately addressable by engines (falling back up-ladder for ops
+    it has no impls for)."""
+    import repro.core.precision as precision
+    from repro.core.qformat import QFormat
+
+    name = "q4_12_test"
+    assert name not in ladder_names()
+    try:
+        idx = ladder_names().index("q16_16")
+        precision.register_level(
+            PrecisionLevel(name, qformat=QFormat(4, 12, "test rung")), index=idx
+        )
+        names = ladder_names()
+        assert names.index(name) == idx  # sits just below q16_16
+        eng = MathEngine(name)
+        assert eng.level.name == name and eng.mode is Mode.FAST
+        # no op registers q4_12_test impls -> nearest more precise (q16_16)
+        assert eng.ctx().op("sin") is eng._impls["sin"]["q16_16"]
+    finally:
+        del precision._LEVELS[name]
+
+
+def test_resolve_level_aliases():
+    assert resolve_level(Mode.FAST).name == MODE_ALIASES[Mode.FAST] == "q16_16"
+    assert resolve_level(Mode.PRECISE).name == "f32"
+    assert resolve_level("fast").name == "q16_16"     # mode-value strings too
+    assert resolve_level("precise").name == "f32"
+    assert resolve_level("q8_24").qformat is Q8_24
+    lvl = resolve_level("q16_16")
+    assert resolve_level(lvl) is lvl
+    with pytest.raises(KeyError, match="unknown precision level"):
+        resolve_level("q99_99")
+
+
+def test_level_mode_projection():
+    assert resolve_level("q8_8").mode is Mode.FAST
+    assert resolve_level("q8_24").mode is Mode.FAST
+    assert resolve_level("f32").mode is Mode.PRECISE
+
+
+# ---------------------------------------------------------------------------
+# compat-alias equivalence (R1): Mode.FAST === level q16_16
+# ---------------------------------------------------------------------------
+
+
+def test_mode_fast_is_q16_16_level():
+    eng = MathEngine(Mode.FAST)
+    assert eng.level.name == "q16_16" and eng.mode is Mode.FAST
+    table_alias = {op: eng.ctx().op(op) for op in eng.ctx().ops}
+    eng.set_level("f32")
+    eng.set_level("q16_16")  # by name this time
+    # identical dispatch tables: the SAME implementation objects
+    for op, fn in table_alias.items():
+        assert eng.ctx().op(op) is fn, op
+
+
+def test_set_mode_set_level_equivalent():
+    eng = MathEngine(Mode.PRECISE)
+    eng.set_mode(Mode.FAST)
+    table_via_mode = {op: eng.ctx().op(op) for op in eng.ctx().ops}
+    eng.set_level("f32")
+    eng.set_level("q16_16")
+    for op, fn in table_via_mode.items():
+        assert eng.ctx().op(op) is fn, op
+    # same-level switches are free and uncounted
+    before = eng.switch_stats.count
+    assert eng.set_mode(Mode.FAST) == 0.0
+    assert eng.switch_stats.count == before
+
+
+def test_ladder_fallback_prefers_more_precise():
+    """An op with no impl at the requested level resolves to the nearest
+    MORE precise level (precision never silently degrades)."""
+    eng = MathEngine("q8_8")
+    # matmul has q16_16 + f32 impls; at q8_8 it must resolve up to q16_16
+    assert eng.ctx().op("matmul") is eng._impls["matmul"]["q16_16"]
+    eng.set_level("q8_24")
+    # at q8_24, matmul resolves up to f32 (not down to q16_16)
+    assert eng.ctx().op("matmul") is eng._impls["matmul"]["f32"]
+
+
+# ---------------------------------------------------------------------------
+# q8_24 dispatch + datapaths
+# ---------------------------------------------------------------------------
+
+
+def test_at_q8_24_dispatches_q8_24_cordic():
+    """Acceptance: engine.at('q8_24') runs the Q8.24 CORDIC ops —
+    bitwise identical to calling the Q8.24 kernel directly."""
+    eng = MathEngine(Mode.PRECISE)
+    theta = np.float32(0.7)
+    with eng.at("q8_24"):
+        got_sin = np.asarray(eng.call("sin", theta))
+        got_atan2 = np.asarray(eng.call("atan2", np.float32(0.3), np.float32(0.9)))
+    assert np.array_equal(got_sin, np.asarray(cd.cordic_sincos24(theta)[0]))
+    assert np.array_equal(
+        got_atan2, np.asarray(cd.cordic_atan2_24(np.float32(0.3), np.float32(0.9)))
+    )
+    assert eng.level.name == "f32"  # restored
+
+
+def test_q8_24_sincos_error_bound(rng):
+    """Q8.24 x 24-iteration CORDIC: |eps| <= 2e-6 (measured 8e-7 with
+    2x margin) vs the Q16.16 path's ~1.5e-4."""
+    t = rng.uniform(-20.0, 20.0, 5001).astype(np.float32)
+    s, c = cd.cordic_sincos24(t)
+    t_exact = f24(np.asarray(to_fixed(t, Q8_24), np.int64))
+    assert np.max(np.abs(np.asarray(s, np.float64) - np.sin(t_exact))) <= 2e-6
+    assert np.max(np.abs(np.asarray(c, np.float64) - np.cos(t_exact))) <= 2e-6
+
+
+def test_q8_24_sincos_bit_exact_vs_oracle(rng):
+    from repro.kernels.cordic.ref import cordic_sincos_ref
+
+    tq = q24(rng.uniform(-6.0, 6.0, 2048))
+    got_s, got_c = cd.cordic_sincos_q16(tq, iterations=24, frac_bits=24)
+    want_s, want_c = cordic_sincos_ref(tq, iterations=24, frac_bits=24)
+    np.testing.assert_array_equal(np.asarray(got_s), want_s)
+    np.testing.assert_array_equal(np.asarray(got_c), want_c)
+
+
+def test_q8_24_atan2_error_bound(rng):
+    y = rng.uniform(-1.0, 1.0, 4001)
+    x = rng.uniform(-1.0, 1.0, 4001)
+    got = f24(cd.atan2_q24(q24(y), q24(x)))
+    want = np.arctan2(f24(q24(y)), f24(q24(x)))
+    assert np.max(np.abs(got - want)) <= 1e-6
+    # float boundary normalizes any magnitude into the Q8.24 word
+    big = np.float32(3.0e4)
+    got_b = float(cd.cordic_atan2_24(big, big))
+    assert got_b == pytest.approx(math.pi / 4, abs=1e-6)
+
+
+def test_q8_24_atan2_bit_exact_vs_oracle(rng):
+    from repro.kernels.cordic.ref import atan2_ref
+
+    y = q24(rng.uniform(-100.0, 100.0, 1024))
+    x = q24(rng.uniform(-100.0, 100.0, 1024))
+    got = np.asarray(cd.atan2_q24(y, x))
+    np.testing.assert_array_equal(got, atan2_ref(y, x, iterations=24, frac_bits=24))
+
+
+# ---------------------------------------------------------------------------
+# div_q16 (ROADMAP public op)
+# ---------------------------------------------------------------------------
+
+
+def q16(x):
+    return np.round(np.asarray(x, np.float64) * 65536.0).astype(np.int32)
+
+
+def test_div_q16_error_bound(rng):
+    # full-range operands PLUS a small-denominator stress batch (the
+    # regime where a numerator-truncating normalization loses bits)
+    num = q16(np.concatenate([
+        rng.uniform(-30000.0, 30000.0, 6001),
+        rng.uniform(-300.0, 300.0, 3000),
+    ]))
+    den = q16(np.concatenate([
+        rng.uniform(-30000.0, 30000.0, 6001),
+        rng.uniform(-0.05, 0.05, 3000),
+    ]))
+    den = np.where(den == 0, 1, den)
+    got = np.asarray(cd.div_q16(num, den), np.int64) / 65536.0
+    want = np.asarray(num, np.float64) / np.asarray(den, np.float64)
+    ok = np.abs(want) < 32767  # below the Q16.16 saturation envelope
+    err = np.abs(got - want)[ok]
+    assert np.all(err <= 2.0 ** -15 * (1.0 + np.abs(want[ok])))
+
+
+def test_div_q16_edges():
+    assert int(cd.div_q16(np.int32(0), np.int32(0))) == 0
+    assert int(cd.div_q16(q16(7.0), np.int32(0))) == (1 << 31) - 1      # +sat
+    assert int(cd.div_q16(q16(-7.0), np.int32(0))) == -((1 << 31) - 1)  # -sat
+    # quotient saturation: 30000 / 2^-16 overflows the envelope
+    assert int(cd.div_q16(q16(30000.0), np.int32(1))) == (1 << 31) - 1
+    # sign grid
+    for a, b in ((10.0, 4.0), (-10.0, 4.0), (10.0, -4.0), (-10.0, -4.0)):
+        got = float(from_fixed(cd.div_q16(q16(a), q16(b))))
+        assert got == pytest.approx(a / b, abs=2e-4), (a, b)
+
+
+def test_div_registered_in_opset_and_engine():
+    from repro.core.precision import OP_SET
+
+    assert "div" in OP_SET
+    eng = MathEngine(Mode.PRECISE)
+    precise = float(eng.call("div", np.float32(10.0), np.float32(4.0)))
+    eng.set_mode(Mode.FAST)
+    fast = float(eng.call("div", np.float32(10.0), np.float32(4.0)))
+    assert precise == pytest.approx(2.5, abs=1e-6)
+    assert fast == pytest.approx(2.5, abs=1e-4)
+
+
+def test_div_kernel_bit_exact_vs_oracle(rng):
+    from repro.kernels.cordic import ref
+    from repro.kernels.cordic.universal import div_kernel_call
+
+    for shape in ((512,), (1000,), (7,), (9, 33)):
+        num = q16(rng.uniform(-20000.0, 20000.0, shape))
+        den = q16(rng.uniform(-20000.0, 20000.0, shape))
+        got = np.asarray(div_kernel_call(num, den))
+        assert got.shape == shape and got.dtype == np.int32
+        np.testing.assert_array_equal(got, ref.div_ref(num, den))
+
+
+def test_div_float_boundary(rng):
+    from repro.kernels.cordic import ops
+
+    num = rng.uniform(-100.0, 100.0, (2048,)).astype(np.float32)
+    den = rng.uniform(1.0, 100.0, (2048,)).astype(np.float32)
+    got = np.asarray(ops.div(num, den))
+    np.testing.assert_allclose(got, num / den, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# per-op policy
+# ---------------------------------------------------------------------------
+
+
+def test_policy_per_op_overrides():
+    eng = MathEngine(Mode.FAST)
+    pol = PrecisionPolicy(per_op={"sin": "q8_24", "matmul": "f32"})
+    with eng.at(pol):
+        ctx = eng.ctx()
+        assert ctx.op("sin") is eng._impls["sin"]["q8_24"]
+        assert ctx.op("matmul") is eng._impls["matmul"]["f32"]
+        # unlisted ops follow the engine's current level
+        assert ctx.op("sqrt") is eng._impls["sqrt"]["q16_16"]
+    # policy restored (and with it the uniform q16_16 table)
+    assert eng.ctx().op("sin") is eng._impls["sin"]["q16_16"]
+
+
+def test_policy_default_pins_all_ops():
+    eng = MathEngine(Mode.PRECISE)
+    pol = PrecisionPolicy(default="q16_16", per_op={"atan2": "q8_24"})
+    with eng.at(pol):
+        assert eng.ctx().op("sqrt") is eng._impls["sqrt"]["q16_16"]
+        assert eng.ctx().op("atan2") is eng._impls["atan2"]["q8_24"]
+    assert eng.ctx().op("sqrt") is eng._impls["sqrt"]["f32"]
+
+
+def test_policy_accepts_mode_aliases_and_is_hashable():
+    pol = PrecisionPolicy(default=Mode.FAST, per_op={"sin": Mode.PRECISE})
+    assert pol.default == "q16_16"
+    assert pol.level_for("sin", "q16_16") == "f32"
+    assert pol.level_for("cos", "q8_24") == "q16_16"  # default wins
+    assert "sin" in pol and "cos" not in pol
+    hash(pol)  # context-cache key
+
+
+# ---------------------------------------------------------------------------
+# scoped dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_at_scoping_and_nesting():
+    eng = MathEngine(Mode.PRECISE)
+    assert eng.level.name == "f32"
+    with eng.at("q16_16"):
+        assert eng.level.name == "q16_16"
+        with eng.at("q8_24"):
+            assert eng.level.name == "q8_24"
+            with eng.at(Mode.PRECISE):
+                assert eng.level.name == "f32"
+            assert eng.level.name == "q8_24"
+        assert eng.level.name == "q16_16"
+    assert eng.level.name == "f32"
+
+
+def test_at_restores_on_exception():
+    eng = MathEngine(Mode.PRECISE)
+    with pytest.raises(RuntimeError):
+        with eng.at("q16_16"):
+            raise RuntimeError("boom")
+    assert eng.level.name == "f32"
+
+
+def test_at_switches_are_o1_reference_swaps():
+    """Scoped entry/exit after warmup must be microseconds-scale —
+    contexts are cached, so entering a scope never rebuilds tables."""
+    eng = MathEngine(Mode.PRECISE)
+    with eng.at("q8_24"):
+        pass  # warm the context cache
+    lat = []
+    for _ in range(20):
+        t0 = eng.switch_stats.count
+        with eng.at("q8_24"):
+            lat.append(eng.switch_stats.last_latency_us)
+        assert eng.switch_stats.count == t0 + 2  # enter + exit
+    med = sorted(lat)[len(lat) // 2]
+    assert med < 5e3, f"scoped switch median {med:.1f}us — not O(1)"
+
+
+def test_context_is_immutable_and_carries_level():
+    eng = MathEngine("q8_24")
+    ctx = eng.ctx()
+    assert ctx.level.name == "q8_24" and ctx.mode is Mode.FAST
+    with pytest.raises(AttributeError):
+        ctx.level = resolve_level("f32")
+
+
+# ---------------------------------------------------------------------------
+# jit-safe functional dispatch: level changes with ZERO retraces
+# ---------------------------------------------------------------------------
+
+
+def test_switched_dispatch_zero_retrace():
+    eng = MathEngine(Mode.FAST)
+    traces = []
+
+    def probe(fn, tag):
+        def wrapped(*args):
+            traces.append(tag)  # appended once per TRACE, not per call
+            return fn(*args)
+        return wrapped
+
+    eng.register(
+        "sin",
+        q16_16=probe(lambda t: cd.cordic_sincos(t)[0], "q16_16"),
+        q8_24=probe(lambda t: cd.cordic_sincos24(t)[0], "q8_24"),
+        f32=probe(jnp.sin, "f32"),
+    )
+    dispatch, names = eng.switched("sin", levels=("q16_16", "q8_24", "f32"))
+    step = jax.jit(dispatch)
+    x = jnp.float32(0.5)
+
+    out0 = step(jnp.int32(0), x)
+    first_traces = list(traces)
+    # lax.switch traces every branch exactly once at first compilation
+    assert sorted(first_traces) == ["f32", "q16_16", "q8_24"]
+
+    # level changes = data, not code: NO new traces, results move
+    out1 = step(jnp.int32(1), x)
+    out2 = step(jnp.int32(2), x)
+    assert traces == first_traces, "level switch retraced the step"
+    assert float(out0) == pytest.approx(math.sin(0.5), abs=8e-4)
+    assert float(out1) == pytest.approx(math.sin(0.5), abs=2e-6)
+    assert float(out2) == pytest.approx(math.sin(0.5), abs=1e-7)
+    # the jit cache compiled ONE executable for all three levels
+    assert step._cache_size() == 1
+
+
+def test_level_index_tracks_engine_level():
+    eng = MathEngine(Mode.FAST)
+    _, names = eng.switched("sin", levels=("q16_16", "q8_24", "f32"))
+    assert eng.level_index(names) == 0
+    eng.set_level("q8_24")
+    assert eng.level_index(names) == 1
+    eng.set_mode(Mode.PRECISE)
+    assert eng.level_index(names) == 2
+    # absent level maps to the nearest more precise entry
+    eng.set_level("q8_8")
+    assert eng.level_index(("q16_16", "f32")) == 0
+    eng.set_level("q8_24")
+    assert eng.level_index(("q16_16", "f32")) == 1
+
+
+def test_trainer_jit_switch_zero_retrace(tmp_path):
+    """The trainer's jit_switch path: one executable, level moves by
+    traced index mid-run with no recompilation."""
+    from repro.configs import smoke
+    from repro.runtime.train_loop import Trainer, TrainerConfig
+
+    cfg = smoke("deepseek_7b")
+    t = Trainer(cfg, TrainerConfig(
+        total_steps=4, ckpt_every=0, ckpt_dir=str(tmp_path), log_every=100,
+        start_mode=Mode.PRECISE, jit_switch=True,
+    ))
+    t.run()
+    assert t._switched_step._cache_size() == 1
+    t.engine.set_mode(Mode.FAST)
+    t.start_step, t.tcfg.total_steps = 4, 8
+    out = t.run()
+    assert t._switched_step._cache_size() == 1, "level switch recompiled the step"
+    modes = {h["mode"] for h in out["history"]}
+    assert modes == {"fast", "precise"} and np.isfinite(out["final_loss"])
+
+
+# ---------------------------------------------------------------------------
+# multi-tier arbiter hysteresis
+# ---------------------------------------------------------------------------
+
+LADDER4 = ("q8_8", "q16_16", "q8_24", "f32")
+
+
+def _warm(arb, steps, start=0):
+    for s in range(start, start + steps):
+        arb.observe(s, loss=1.0, grad_norm=1.0)
+    return start + steps
+
+
+def test_arbiter_multi_tier_step_up_one_rung():
+    arb = PrecisionArbiter(ArbiterConfig(
+        spike_factor=4.0, cooldown_steps=0, ladder=LADDER4, start_mode="q8_8",
+    ))
+    step = _warm(arb, 16)
+    assert arb.observe(step, loss=1.0, grad_norm=100.0) == "q16_16"
+    assert arb.rung == 1
+    step = _warm(arb, 16, step + 1)
+    assert arb.observe(step, loss=1.0, grad_norm=100.0) == "q8_24"
+    step = _warm(arb, 16, step + 1)
+    assert arb.observe(step, loss=1.0, grad_norm=100.0) == "f32"
+    # at the top: further spikes have nowhere to go
+    step = _warm(arb, 16, step + 1)
+    assert arb.observe(step, loss=1.0, grad_norm=100.0) is None
+    assert arb.mode == "f32"
+
+
+def test_arbiter_nonfinite_jumps_to_top():
+    arb = PrecisionArbiter(ArbiterConfig(
+        cooldown_steps=10**6, ladder=LADDER4, start_mode="q8_8",
+    ))
+    step = _warm(arb, 10)
+    arb._last_switch_step = step - 1  # mid-cooldown by construction
+    assert arb.observe(step, loss=float("nan"), grad_norm=1.0) == "f32"
+    assert arb.rung == len(LADDER4) - 1
+    assert arb.decisions[-1][2] == "non-finite"
+
+
+def test_arbiter_multi_tier_step_down_one_rung():
+    arb = PrecisionArbiter(ArbiterConfig(
+        spike_factor=4.0, stable_steps=4, cooldown_steps=0,
+        ladder=LADDER4, start_mode="f32",
+    ))
+    step = 0
+    downs = []
+    for _ in range(30):
+        rec = arb.observe(step, loss=1.0, grad_norm=1.0)
+        if rec is not None:
+            downs.append(rec)
+        step += 1
+    assert downs[:3] == ["q8_24", "q16_16", "q8_8"]
+    assert arb.rung == 0
+
+
+def test_arbiter_binary_ladder_compat():
+    """The default config still speaks Mode (identity comparisons)."""
+    arb = PrecisionArbiter(ArbiterConfig(cooldown_steps=0))
+    assert arb.mode is Mode.FAST and arb.ladder == (Mode.FAST, Mode.PRECISE)
+    step = _warm(arb, 10)
+    assert arb.observe(step, loss=float("nan"), grad_norm=1.0) is Mode.PRECISE
+    assert arb.mode is Mode.PRECISE
+
+
+def test_arbiter_rejects_start_outside_ladder():
+    with pytest.raises(ValueError, match="not in the ladder"):
+        PrecisionArbiter(ArbiterConfig(ladder=("q16_16", "f32"), start_mode="q8_8"))
+
+
+def test_trainer_syncs_arbiter_start_to_engine_level(tmp_path):
+    """The trainer's arbiter starts at the rung the ENGINE starts at —
+    and a start level outside the arbiter ladder is a loud error, not a
+    silent demotion on the first recommendation."""
+    from repro.configs import smoke
+    from repro.runtime.train_loop import Trainer, TrainerConfig
+
+    cfg = smoke("deepseek_7b")
+    t = Trainer(cfg, TrainerConfig(
+        total_steps=1, ckpt_every=0, ckpt_dir=str(tmp_path), log_every=100,
+        start_mode=Mode.PRECISE, use_arbiter=True,  # arbiter default starts FAST
+    ))
+    assert t.arbiter.mode is Mode.PRECISE  # synced to the engine's level
+
+    t2 = Trainer(cfg, TrainerConfig(
+        total_steps=1, ckpt_every=0, ckpt_dir=str(tmp_path), log_every=100,
+        start_mode="q8_24", use_arbiter=True,
+        arbiter=ArbiterConfig(ladder=LADDER4, start_mode="q8_8"),
+    ))
+    assert t2.arbiter.mode == "q8_24" and t2.engine.level.name == "q8_24"
+
+    with pytest.raises(ValueError, match="not in the arbiter ladder"):
+        Trainer(cfg, TrainerConfig(
+            total_steps=1, ckpt_every=0, ckpt_dir=str(tmp_path), log_every=100,
+            start_mode="q8_24", use_arbiter=True,  # binary ladder: no q8_24 rung
+        ))
+
+
+def test_engine_accepts_arbiter_ladder_entries():
+    """End-to-end: a multi-tier arbiter drives engine.set_level."""
+    eng = MathEngine("q8_8")
+    arb = PrecisionArbiter(ArbiterConfig(
+        spike_factor=4.0, cooldown_steps=0, ladder=LADDER4, start_mode="q8_8",
+    ))
+    step = _warm(arb, 16)
+    rec = arb.observe(step, loss=1.0, grad_norm=100.0)
+    assert eng.set_level(rec) >= 0.0
+    assert eng.level.name == "q16_16"

@@ -89,11 +89,6 @@ def test_train_loss_decreases(tmp_path):
     assert last < first - 0.1, (first, last)
 
 
-@pytest.mark.xfail(
-    reason="pre-existing: resume restores an earlier start_step than expected on "
-    "this toolchain — see ROADMAP 'Known-failing tier-1 tests'",
-    strict=False,
-)
 def test_failure_injection_and_bitwise_resume(tmp_path):
     with pytest.raises(InjectedFailure):
         _trainer(tmp_path, total_steps=16, ckpt_every=4, crash_at_step=10).run()
