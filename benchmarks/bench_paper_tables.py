@@ -232,6 +232,107 @@ def bench_ladder_switch():
     ]
 
 
+#: (section name, M tokens, config module) — the fused-MLP bench runs at
+#: REAL MLP shapes from configs/ (decode-sized M), per the roadmap item.
+FUSED_MLP_SHAPES = (
+    ("gemma2_2b", 8, "repro.configs.gemma2_2b"),
+    ("mixtral_expert", 8, "repro.configs.mixtral_8x22b"),
+)
+
+
+def _fused_mlp_cases(iters: int, repeats: int):
+    """Measure fused / unfused / precise SwiGLU medians per config shape."""
+    import importlib
+
+    from repro.core.quantization import QuantizedWeightCache
+    from repro.models.layers import attach_quantized_weights, swiglu_mlp
+
+    rng = np.random.default_rng(42)
+    out = {}
+    for name, M, modname in FUSED_MLP_SHAPES:
+        cfgmod = importlib.import_module(modname)
+        d, f = cfgmod.CONFIG.d_model, cfgmod.CONFIG.d_ff
+        params = {
+            "norm": jnp.zeros((d,)),
+            "w_gate": jnp.asarray(rng.standard_normal((d, f)), jnp.float32) * 0.02,
+            "w_up": jnp.asarray(rng.standard_normal((d, f)), jnp.float32) * 0.02,
+            "w_down": jnp.asarray(rng.standard_normal((f, d)), jnp.float32) * 0.02,
+        }
+        x = jnp.asarray(rng.standard_normal((M, d)), jnp.float32)
+        qparams = attach_quantized_weights(params, QuantizedWeightCache())
+        step = jax.jit(lambda p, x, m: swiglu_mlp(p, x, m), static_argnums=(2,))
+        kw = dict(warmup=1, iters=iters, repeats=repeats)
+        out[name] = {
+            "M": M, "d_model": d, "d_ff": f,
+            "unfused_us": _bench(step, params, x, "fast", **kw),
+            "fused_us": _bench(step, qparams, x, "fast", **kw),
+            "precise_us": _bench(step, params, x, "precise", **kw),
+        }
+    return out
+
+
+def _decode_tokens_per_s(max_new: int = 12):
+    """Smoke-model decode throughput, FAST (fused + cached weights) vs
+    PRECISE — the end-to-end number the fusion and the sampling/host-sync
+    satellites move."""
+    from repro.configs.gemma2_2b import CONFIG
+    from repro.models import init_params
+    from repro.models.config import smoke_config
+    from repro.runtime.serve import BatchedServer, ServerConfig
+
+    cfg = smoke_config(CONFIG)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [[1, 2, 3, 4], [5, 6, 7]]
+    out = {}
+    for label, level in (("fast", "q16_16"), ("precise", "f32")):
+        srv = BatchedServer(
+            cfg, params,
+            ServerConfig(max_batch=2, max_len=64, max_new=max_new, start_mode=level),
+        )
+        srv.generate(prompts)  # warm (compile both steps)
+        t0 = time.perf_counter()
+        outs = srv.generate(prompts)
+        dt = time.perf_counter() - t0
+        new_toks = sum(len(o) - len(p) for o, p in zip(outs, prompts))
+        out[label] = new_toks / dt
+    return out
+
+
+def bench_fused_mlp(iters: int = 2, repeats: int = 3, decode: bool = True):
+    """Fused FAST SwiGLU (single deferred correction + quantize-once
+    weights) vs the unfused three-dispatch path vs precise, at MLP
+    shapes from configs/.  CPU-host proxies: the *relation* that must
+    hold (and that the CI smoke gates on) is fused <= unfused — the
+    fused path removes two activation quantizations, three per-call
+    weight quantizations, and the bf16 HBM round-trip of the gate."""
+    cases = _fused_mlp_cases(iters=iters, repeats=repeats)
+    rows = []
+    for name, c in cases.items():
+        rows.append((
+            f"fused_mlp.{name}.fused", c["fused_us"],
+            f"unfused_us={c['unfused_us']:.0f},precise_us={c['precise_us']:.0f},"
+            f"speedup_vs_unfused={c['unfused_us'] / c['fused_us']:.2f},"
+            f"M={c['M']},d={c['d_model']},f={c['d_ff']}",
+        ))
+    if decode:
+        tok = _decode_tokens_per_s()
+        rows.append((
+            "fused_mlp.decode_tok_s", 0.0,
+            f"fast={tok['fast']:.1f},precise={tok['precise']:.1f} (smoke model)",
+        ))
+    return rows
+
+
+def fused_mlp_json(iters: int = 2, repeats: int = 3) -> dict:
+    """The BENCH_fused_mlp.json payload: per-shape medians + decode
+    tokens/s, so the perf trajectory records across PRs."""
+    return {
+        "bench": "fused_mlp",
+        "shapes": _fused_mlp_cases(iters=iters, repeats=repeats),
+        "decode_tokens_per_s": _decode_tokens_per_s(),
+    }
+
+
 def bench_footprint():
     """Paper §4.3.2: 88-byte static footprint decomposition."""
     from repro.core.qformat import static_footprint_bytes
@@ -260,11 +361,12 @@ def bench_deferred_error():
 
 ALL = [bench_trig, bench_universal_family, bench_scalar_mul,
        bench_matmul_crossover, bench_switch, bench_ladder_switch,
-       bench_footprint, bench_deferred_error]
+       bench_fused_mlp, bench_footprint, bench_deferred_error]
 
-#: the CI smoke set: the O(1)-switch claim (binary + ladder) and the
-#: universal-family error bounds at a reduced batch — minutes, not hours.
-SMOKE = ["switch", "ladder", "universal"]
+#: the CI smoke set: the O(1)-switch claim (binary + ladder), the
+#: universal-family error bounds at a reduced batch, and the fused-MLP
+#: latency relation (fused <= unfused) — minutes, not hours.
+SMOKE = ["switch", "ladder", "universal", "fused_mlp"]
 
 #: generous CPU-host ceiling for the smoke gate: a retrace/rebuild on a
 #: switch shows up as milliseconds; shared-runner noise does not.
@@ -299,6 +401,7 @@ def main(argv=None):
         rows.extend(bench_switch())
         rows.extend(bench_ladder_switch())
         rows.extend(bench_universal_family(n=8192))
+        rows.extend(bench_fused_mlp(iters=1, repeats=3, decode=False))
     else:
         rows = run()
 
@@ -321,8 +424,21 @@ def main(argv=None):
             print(f"SMOKE FAIL: switch medians over {SMOKE_SWITCH_BUDGET_US}us: {bad}",
                   file=sys.stderr)
             return 1
+        # the fused-MLP perf relation: the single-correction fused path
+        # must not lose to the three-dispatch unfused path it replaces.
+        slow = []
+        for name, us, derived in rows:
+            if name.startswith("fused_mlp.") and "unfused_us=" in derived:
+                unfused = float(derived.split("unfused_us=")[1].split(",")[0])
+                if us > unfused:
+                    slow.append((name, us, unfused))
+        if slow:
+            print(f"SMOKE FAIL: fused SwiGLU median above unfused: {slow}",
+                  file=sys.stderr)
+            return 1
         print(f"smoke ok: {len(switch_rows)} switch medians under "
-              f"{SMOKE_SWITCH_BUDGET_US:.0f}us", file=sys.stderr)
+              f"{SMOKE_SWITCH_BUDGET_US:.0f}us; fused<=unfused at "
+              f"{len(FUSED_MLP_SHAPES)} shapes", file=sys.stderr)
     return 0
 
 

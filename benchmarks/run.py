@@ -1,10 +1,16 @@
 """Benchmark harness entrypoint: one section per paper table/figure +
 the roofline cell summary.  Prints ``name,us_per_call,derived`` CSV.
 
-Run:  PYTHONPATH=src python -m benchmarks.run [--section trig|universal|mul|matmul|switch|roofline|all]
+Run:  PYTHONPATH=src python -m benchmarks.run [--section trig|universal|mul|matmul|switch|fused_mlp|roofline|all]
+
+``--json`` additionally records the fused-MLP perf trajectory: writes
+``BENCH_fused_mlp.json`` (fused/unfused/precise medians at the
+configs/ MLP shapes + smoke-model decode tokens/s) next to the CSV
+output, so successive PRs accumulate comparable numbers.
 """
 
 import argparse
+import json
 import sys
 from pathlib import Path
 
@@ -17,6 +23,12 @@ from benchmarks import bench_paper_tables, roofline  # noqa: E402
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all")
+    ap.add_argument(
+        "--json", nargs="?", const="BENCH_fused_mlp.json", default=None,
+        metavar="PATH",
+        help="also write the fused-MLP medians + decode tokens/s as JSON "
+             "(default path: BENCH_fused_mlp.json)",
+    )
     args = ap.parse_args()
 
     sections = {
@@ -26,10 +38,25 @@ def main() -> None:
         "matmul": bench_paper_tables.bench_matmul_crossover,
         "switch": bench_paper_tables.bench_switch,
         "ladder": bench_paper_tables.bench_ladder_switch,
+        "fused_mlp": bench_paper_tables.bench_fused_mlp,
         "footprint": bench_paper_tables.bench_footprint,
         "deferred": bench_paper_tables.bench_deferred_error,
         "roofline": roofline.run,
     }
+
+    if args.json is not None or args.section == "json-only":
+        payload = bench_paper_tables.fused_mlp_json()
+        out_path = args.json or "BENCH_fused_mlp.json"
+        Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"wrote {out_path}", file=sys.stderr)
+        if args.section == "json-only":
+            return
+        # the JSON payload already ran the fused-MLP suite — don't pay
+        # for it twice in the same invocation
+        sections.pop("fused_mlp", None)
+        if args.section == "fused_mlp":
+            return
+
     todo = sections.values() if args.section == "all" else [sections[args.section]]
 
     print("name,us_per_call,derived")

@@ -8,16 +8,32 @@ version-sensitive is funneled through here:
   ``pltpu.CompilerParams``.
 * ``shard_map`` — promoted from ``jax.experimental.shard_map`` to
   ``jax.shard_map``, with ``check_rep`` renamed to ``check_vma``.
+* ``default_interpret`` — backend-dependent Pallas interpret default,
+  so kernel call sites never hardcode ``interpret=True``.
 """
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.experimental.pallas.tpu as pltpu
 
-__all__ = ["CompilerParams", "shard_map"]
+__all__ = ["CompilerParams", "shard_map", "default_interpret"]
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+@functools.lru_cache(maxsize=None)
+def default_interpret() -> bool:
+    """Pallas interpret-mode default: compiled kernels on TPU backends,
+    interpreter everywhere else (CPU CI, GPU dry-runs).
+
+    Every kernel entrypoint takes ``interpret=None`` and resolves it
+    here, so real hardware runs compiled Mosaic kernels without any
+    call-site changes.  Cached: the backend cannot change mid-process.
+    """
+    return jax.default_backend() != "tpu"
 
 
 if hasattr(jax, "shard_map"):

@@ -320,6 +320,7 @@ class MathEngine:
         self._barrier = barrier or TwoPhaseBarrier()
         self._lock = threading.RLock()
         self._inflight: Any = None  # last dispatched device result (quiesce target)
+        self._weight_cache = None
         self.switch_stats = SwitchStats()
         self._default_ops()
 
@@ -507,6 +508,35 @@ class MathEngine:
                 setattr(self, "_policy", policy),
                 setattr(self, "_ctx", target),
             ), tag=f"policy:{policy!r}")
+
+    # -- quantized-weight cache --------------------------------------------
+
+    @property
+    def weight_cache(self):
+        """The engine's quantize-once weight store (lazily created).
+
+        Entries are keyed per ``(param, level)``, so ``set_level`` /
+        ``engine.at`` / jit-switch dispatch stay coherent without any
+        invalidation — each rung reads its own immutable entries.  Only
+        a *weight update* invalidates, and that goes through the
+        two-phase barrier (:meth:`invalidate_weights`).
+        """
+        with self._lock:
+            if self._weight_cache is None:
+                from repro.core.quantization import QuantizedWeightCache
+
+                self._weight_cache = QuantizedWeightCache()
+            return self._weight_cache
+
+    def invalidate_weights(self, name: Optional[str] = None) -> float:
+        """Drop cached quantized weights through the two-phase barrier
+        (paper §4.3.1 applied to the weight table): quiesce the
+        in-flight step, reach cross-host agreement, THEN clear — so no
+        step ever mixes old float weights with stale int8 payloads.
+        Returns the transition latency in us."""
+        cache = self.weight_cache
+        with self._lock:
+            return self._swap(lambda: cache.invalidate(name), tag=f"weights:{name}")
 
     def _swap(self, swap_fn: Callable[[], Any], tag: str) -> float:
         t0 = time.perf_counter()

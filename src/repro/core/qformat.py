@@ -28,6 +28,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "QFormat",
@@ -51,7 +52,11 @@ __all__ = [
     "add_64",
 ]
 
-_U16_MASK = jnp.uint32(0xFFFF)
+# NB: a NumPy scalar, deliberately NOT jnp: this module is imported
+# lazily from inside traced functions (layers.py fast paths), and a
+# module-level jnp constant created during a trace leaks that trace's
+# tracer into every later jit (UnexpectedTracerError).
+_U16_MASK = np.uint32(0xFFFF)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -15,8 +15,9 @@ extension): int8 quantization with error feedback, used by
 
 from __future__ import annotations
 
+import threading
 from functools import partial
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +28,11 @@ __all__ = [
     "dequantize_pow2",
     "quantize_q16",
     "compress_with_feedback",
+    "QuantizedWeightCache",
 ]
+
+#: channel spec: None (per-tensor), one axis, or a tuple of kept axes
+Axis = Union[None, int, Tuple[int, ...]]
 
 
 class QTensor(NamedTuple):
@@ -35,7 +40,7 @@ class QTensor(NamedTuple):
 
     q: jnp.ndarray          # int8 / int16 / int32 payload
     exp: jnp.ndarray        # int32 per-channel exponents (broadcastable)
-    axis: Optional[int] = None  # channel axis the exponents follow
+    axis: Axis = None       # channel axis (or axes) the exponents follow
 
     @property
     def dtype(self):
@@ -51,19 +56,24 @@ def _storage_dtype(bits: int):
 
 
 @partial(jax.jit, static_argnames=("bits", "axis"))
-def quantize_pow2(x, bits: int = 8, axis: Optional[int] = None) -> QTensor:
+def quantize_pow2(x, bits: int = 8, axis: Axis = None) -> QTensor:
     """Quantize to a power-of-two-scaled integer grid.
 
     exp is chosen per channel (or per tensor when axis is None) as the
     smallest e with ``amax / 2**e <= 2**(bits-1)``, so the payload fits
     the signed ``bits``-wide integer after round-to-nearest (the single
     rounding event — paper Eq. 6 applies per element).
+
+    ``axis`` may be a tuple of KEPT axes (one exponent per index along
+    each kept axis, reduced over the rest) — the per-(expert,
+    out-channel) case for stacked MoE weights.
     """
     x = jnp.asarray(x, jnp.float32)
     if axis is None:
         amax = jnp.max(jnp.abs(x))
     else:
-        reduce_axes = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
+        keep = {a % x.ndim for a in (axis if isinstance(axis, tuple) else (axis,))}
+        reduce_axes = tuple(i for i in range(x.ndim) if i not in keep)
         amax = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
     # e = ceil(log2(amax)) - (bits-1); amax==0 -> e=0
     safe = jnp.maximum(amax, jnp.float32(1e-30))
@@ -103,3 +113,99 @@ def compress_with_feedback(
     qt = quantize_pow2(g, bits=bits, axis=None)
     new_residual = g - dequantize_pow2(qt)
     return qt, new_residual
+
+
+# ---------------------------------------------------------------------------
+# quantize-once weight store for the FAST path
+# ---------------------------------------------------------------------------
+
+
+class QuantizedWeightCache:
+    """Weights quantized ONCE per ``(param_name, level)`` — never per call.
+
+    The FAST model path used to requantize every weight matrix on every
+    forward (``quantize_pow2`` inside ``dot_fast_int8``) — per token, in
+    decode.  Weights are constant across serving steps, so this cache
+    hoists the quantization to registration / level-switch time and the
+    step functions consume pre-quantized int8 payloads.
+
+    Coherence rules (documented in ROADMAP "Fused FAST path"):
+
+    * entries are immutable once stored and keyed by ``(name, level)``,
+      so level switches (``set_level``, scoped ``engine.at``, and the
+      traced-index ``switched`` dispatch) never observe stale data —
+      each rung reads its own entries;
+    * *invalidation* (weights changed under the engine, e.g. a new
+      checkpoint) must go through the two-phase barrier so no in-flight
+      step sees a half-updated table — use
+      :meth:`MathEngine.invalidate_weights`, which wraps
+      :meth:`invalidate` in the quiesce -> swap protocol;
+    * ``quantize_calls`` / ``hits`` are the counting hook the tests use
+      to assert the decode loop performs ZERO weight quantizations.
+    """
+
+    def __init__(self, bits: int = 8):
+        self.bits = bits
+        self._store: dict = {}
+        self._specs: dict = {}  # key -> (shape, dtype, axis) sanity record
+        self._lock = threading.RLock()
+        self.quantize_calls = 0
+        self.hits = 0
+
+    def get(self, name: str, w, *, level: str = "q16_16", axis: Axis = None) -> QTensor:
+        """The quantized form of ``w``, computed at most once per
+        ``(name, level)``.  ``axis`` follows :func:`quantize_pow2`.
+
+        A hit validates shape/dtype/axis against the stored entry and
+        raises on mismatch (two different param trees sharing one cache
+        under the same names).  A hit does NOT compare values — if the
+        weights behind ``name`` changed, call
+        :meth:`MathEngine.invalidate_weights` first; silently serving
+        stale int8 payloads is exactly what the barrier-mediated
+        invalidation contract exists to prevent.
+        """
+        key = (name, level)
+        spec = (tuple(w.shape), str(getattr(w, "dtype", "?")), axis)
+        with self._lock:
+            hit = self._store.get(key)
+            if hit is not None:
+                if self._specs[key] != spec:
+                    raise ValueError(
+                        f"QuantizedWeightCache: {key} cached with spec "
+                        f"{self._specs[key]}, requested {spec} — different "
+                        f"param under the same name? invalidate first."
+                    )
+                self.hits += 1
+                return hit
+        qt = quantize_pow2(w, bits=self.bits, axis=axis)
+        with self._lock:
+            self.quantize_calls += 1
+            self._store.setdefault(key, qt)
+            self._specs[key] = spec
+            return self._store[key]
+
+    def invalidate(self, name: Optional[str] = None) -> int:
+        """Drop cached entries (all levels of ``name``; all entries when
+        None).  Call through the engine's barrier-mediated
+        ``invalidate_weights`` in live deployments."""
+        with self._lock:
+            if name is None:
+                n = len(self._store)
+                self._store.clear()
+                self._specs.clear()
+                return n
+            victims = [k for k in self._store if k[0] == name]
+            for k in victims:
+                del self._store[k]
+                del self._specs[k]
+            return len(victims)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._store)
+
+    def __contains__(self, key) -> bool:
+        with self._lock:
+            if isinstance(key, tuple):
+                return key in self._store
+            return any(k[0] == key for k in self._store)

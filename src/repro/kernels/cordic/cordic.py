@@ -14,6 +14,7 @@ constants — the paper's §4.3.2 footprint), not streamed from HBM.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +26,7 @@ from repro.core.cordic import (
     atan_table,
     gain_inverse,
 )
-from repro.compat import CompilerParams
+from repro.compat import CompilerParams, default_interpret
 
 __all__ = ["cordic_kernel_call", "LANE", "DEFAULT_BLOCK_ROWS"]
 
@@ -67,12 +68,14 @@ def cordic_kernel_call(
     *,
     iterations: int = 16,
     block_rows: int = DEFAULT_BLOCK_ROWS,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """sin/cos of a Q16.16 int32 array of any shape.
 
     Flattens to (rows, 128) blocks; pads the tail; restores the shape.
     """
+    if interpret is None:
+        interpret = default_interpret()
     shape = theta_q.shape
     flat = jnp.ravel(jnp.asarray(theta_q, jnp.int32))
     n = flat.shape[0]

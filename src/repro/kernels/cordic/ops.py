@@ -4,6 +4,7 @@ the universal (Walther-mode) transcendental family."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +22,7 @@ __all__ = ["sincos", "rope_tables", "atan2", "div", "unary_op"]
 
 
 @functools.partial(jax.jit, static_argnames=("iterations", "interpret"))
-def sincos(theta, iterations: int = 16, interpret: bool = True):
+def sincos(theta, iterations: int = 16, interpret: Optional[bool] = None):
     """float angles -> (sin, cos) float32 through the Pallas kernel."""
     theta_q = to_fixed(theta, Q16_16)
     sin_q, cos_q = cordic_kernel_call(theta_q, iterations=iterations, interpret=interpret)
@@ -30,7 +31,7 @@ def sincos(theta, iterations: int = 16, interpret: bool = True):
 
 @functools.partial(jax.jit, static_argnames=("iterations", "interpret", "dtype"))
 def rope_tables(
-    positions, f_hi, f_lo, iterations: int = 16, interpret: bool = True, dtype=jnp.float32
+    positions, f_hi, f_lo, iterations: int = 16, interpret: Optional[bool] = None, dtype=jnp.float32
 ):
     """Exact-phase RoPE sin/cos tables: Q0.64 phase (core.cordic) ->
     Pallas CORDIC -> (S, head_dim//2) tables in ``dtype``."""
@@ -43,7 +44,7 @@ def rope_tables(
 
 
 @functools.partial(jax.jit, static_argnames=("iterations", "interpret"))
-def atan2(y, x, iterations: int = 16, interpret: bool = True):
+def atan2(y, x, iterations: int = 16, interpret: Optional[bool] = None):
     """float (y, x) -> atan2 float32 through the universal Pallas kernel."""
     out_q = atan2_kernel_call(
         to_fixed(y, Q16_16), to_fixed(x, Q16_16),
@@ -53,7 +54,7 @@ def atan2(y, x, iterations: int = 16, interpret: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("iterations", "interpret"))
-def div(num, den, iterations: int = 17, interpret: bool = True):
+def div(num, den, iterations: int = 17, interpret: Optional[bool] = None):
     """float (num, den) -> num/den float32 through the linear-vectoring
     Pallas kernel (ROADMAP ``div_q16`` public op)."""
     out_q = div_kernel_call(
@@ -64,7 +65,7 @@ def div(num, den, iterations: int = 17, interpret: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("op", "stages", "interpret"))
-def unary_op(w, op: str, stages: int = HYPER_STAGES, interpret: bool = True):
+def unary_op(w, op: str, stages: int = HYPER_STAGES, interpret: Optional[bool] = None):
     """float -> float universal unary op (sqrt/exp/log/tanh/sigmoid)."""
     out_q = universal_kernel_call(
         to_fixed(w, Q16_16), op=op, stages=stages, interpret=interpret

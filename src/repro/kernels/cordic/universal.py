@@ -18,6 +18,7 @@ log(0)=Q16.16 min, tanh(0)=0), so the tail padding is safe.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +33,7 @@ from repro.core.cordic import (
     sqrt_q16_body,
     tanh_q16_body,
 )
-from repro.compat import CompilerParams
+from repro.compat import CompilerParams, default_interpret
 from repro.kernels.cordic.cordic import DEFAULT_BLOCK_ROWS, LANE
 
 __all__ = ["UNARY_OPS", "universal_kernel_call", "atan2_kernel_call", "div_kernel_call"]
@@ -59,9 +60,11 @@ def _div_kernel(num_ref, den_ref, out_ref, *, iterations: int):
     out_ref[...] = div_q16_body(num_ref[...], den_ref[...], iterations)
 
 
-def _blocked_call(kernel, inputs, *, block_rows: int, interpret: bool):
+def _blocked_call(kernel, inputs, *, block_rows: int, interpret: Optional[bool]):
     """Flatten int32 operands to (rows, 128) blocks, pad the tail with
     zeros, run the 1-output kernel over a parallel grid, restore shape."""
+    if interpret is None:
+        interpret = default_interpret()
     shape = inputs[0].shape
     flats = [jnp.ravel(jnp.asarray(v, jnp.int32)) for v in inputs]
     n = flats[0].shape[0]
@@ -93,7 +96,7 @@ def universal_kernel_call(
     op: str,
     stages: int = HYPER_STAGES,
     block_rows: int = DEFAULT_BLOCK_ROWS,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """Apply a unary universal-CORDIC op (sqrt/exp/log/tanh/sigmoid) to
     a Q16.16 int32 array of any shape."""
@@ -113,7 +116,7 @@ def atan2_kernel_call(
     iterations: int = 16,
     frac_bits: int = 16,
     block_rows: int = DEFAULT_BLOCK_ROWS,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """atan2(y, x) on Q(m.n) int32 arrays of any (matching) shape.
     ``frac_bits`` selects the output angle format (24 = the Q8.24
@@ -129,7 +132,7 @@ def div_kernel_call(
     *,
     iterations: int = 17,
     block_rows: int = DEFAULT_BLOCK_ROWS,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """Full-range linear-vectoring division num/den on Q16.16 int32
     arrays (div(0, 0) = 0, so the zero tail padding is safe)."""

@@ -18,13 +18,14 @@ Sliding-window and causal masks are computed from block indices
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from repro.compat import CompilerParams
+from repro.compat import CompilerParams, default_interpret
 
 __all__ = ["flash_attention_call", "DEFAULT_BQ", "DEFAULT_BK"]
 
@@ -89,11 +90,13 @@ def flash_attention_call(
     window=None,
     bq: int = DEFAULT_BQ,
     bk: int = DEFAULT_BK,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """q: (BH, S, D); k: (BH, Skv, D); v: (BH, Skv, Dv) — heads folded
     into the leading dim (GQA repeat handled by ops.py).  Returns
     (BH, S, Dv) in q.dtype."""
+    if interpret is None:
+        interpret = default_interpret()
     BH, S, D = q.shape
     Skv, Dv = k.shape[1], v.shape[2]
     bq_, bk_ = min(bq, _rup(S, 8)), min(bk, _rup(Skv, 128))

@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +15,7 @@ __all__ = ["flash_attention"]
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True, window=None, interpret: bool = True):
+def flash_attention(q, k, v, *, causal: bool = True, window=None, interpret: Optional[bool] = None):
     """q: (B, S, H, D); k/v: (B, Skv, KV, D/Dv) -> (B, S, H, Dv).
 
     GQA: kv heads are repeated to H before folding (B, H) into the

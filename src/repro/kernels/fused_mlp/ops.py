@@ -1,0 +1,79 @@
+"""Public ops for the fused FAST-path SwiGLU kernel.
+
+``fused_swiglu``        — float in / float out hidden stage through the
+                          Pallas kernel (quantize x once -> fused gate+up
+                          int8 MXU -> in-kernel CORDIC sigmoid -> one
+                          combined correction).
+``fused_swiglu_xla``    — the kernel-equivalent XLA form on pre-quantized
+                          operands: ``lax.dot_general`` int8 accumulation
+                          plus the SAME ``swiglu_body_q16`` epilogue.
+                          Lowers on every backend; it is what
+                          ``models/layers.py`` wires into the model FAST
+                          path (mirroring ``dot_fast_int8`` vs qmatmul).
+``fused_swiglu_parts``  — XLA form returning the integer intermediates
+                          (gate Q16.16, sigmoid) so tests can pin the
+                          shared body contract bit-exactly against the
+                          int64 oracle in ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import quantize_pow2
+from repro.kernels.fused_mlp.fused_mlp import (
+    fused_swiglu_kernel_call,
+    swiglu_body_q16,
+)
+
+__all__ = ["fused_swiglu", "fused_swiglu_xla", "fused_swiglu_parts"]
+
+
+def _acc_pair(x_q, wg_q, wu_q):
+    dims = (((x_q.ndim - 1,), (0,)), ((), ()))
+    acc_g = jax.lax.dot_general(
+        x_q, wg_q, dimension_numbers=dims, preferred_element_type=jnp.int32
+    )
+    acc_u = jax.lax.dot_general(
+        x_q, wu_q, dimension_numbers=dims, preferred_element_type=jnp.int32
+    )
+    return acc_g, acc_u
+
+
+@jax.jit
+def fused_swiglu_xla(x_q, wg_q, wu_q, ea, eg, eu):
+    """Kernel-equivalent XLA form on int8 operands: (…, K) x (K, F) x 2
+    -> (…, F) f32 ``silu(x@Wg) * (x@Wu)`` with the shared epilogue."""
+    acc_g, acc_u = _acc_pair(x_q, wg_q, wu_q)
+    ea = jnp.asarray(ea, jnp.int32)
+    e_g = ea + jnp.asarray(eg, jnp.int32).reshape(-1)
+    e_u = ea + jnp.asarray(eu, jnp.int32).reshape(-1)
+    return swiglu_body_q16(acc_g, acc_u, e_g, e_u)
+
+
+@jax.jit
+def fused_swiglu_parts(x_q, wg_q, wu_q, ea, eg, eu):
+    """XLA form returning ``(out, gate_q16, sigmoid_q16)`` — the full
+    shared-body contract, for bit-exact oracle comparison."""
+    acc_g, acc_u = _acc_pair(x_q, wg_q, wu_q)
+    ea = jnp.asarray(ea, jnp.int32)
+    e_g = ea + jnp.asarray(eg, jnp.int32).reshape(-1)
+    e_u = ea + jnp.asarray(eu, jnp.int32).reshape(-1)
+    return swiglu_body_q16(acc_g, acc_u, e_g, e_u, return_parts=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_swiglu(x, wg, wu, interpret: Optional[bool] = None):
+    """float (M, K) x (K, F) x 2 -> float32 (M, F) hidden stage via the
+    Pallas kernel: x quantized ONCE (per-tensor), weights per-channel."""
+    xq = quantize_pow2(x, bits=8, axis=None)
+    gq = quantize_pow2(wg, bits=8, axis=1)
+    uq = quantize_pow2(wu, bits=8, axis=1)
+    return fused_swiglu_kernel_call(
+        xq.q, gq.q, uq.q, xq.exp, gq.exp.reshape(-1), uq.exp.reshape(-1),
+        interpret=interpret,
+    )

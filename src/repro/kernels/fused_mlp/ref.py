@@ -1,0 +1,69 @@
+"""Pure NumPy-int64 oracle for the fused SwiGLU kernel.
+
+Pins the shared body contract (fused_mlp.swiglu_body_q16) down to the
+bit on the integer stages and to float64 on the combined correction:
+
+1. exact int64 accumulation of both int8 matmuls (int32-safe asserted);
+2. deferred saturating round-shift of the gate accumulator to Q16.16 —
+   the single integer rounding event;
+3. ``sigmoid_ref`` (the NumPy universal-CORDIC oracle) on the Q16.16
+   gate;
+4. one combined power-of-two correction
+   ``acc_g * acc_u * sig * 2**(e_g + e_u - 16)`` in float64 (the kernel
+   computes it in f32 — compare with rtol ~1e-5, the f32 mantissa).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.cordic.ref import sigmoid_ref
+
+_RAW_MAX = (1 << 31) - 1
+
+
+def swiglu_body_ref(acc_g, acc_u, e_g, e_u, return_parts: bool = False):
+    """NumPy mirror of ``fused_mlp.swiglu_body_q16`` on int64 inputs."""
+    acc_g = np.asarray(acc_g, np.int64)
+    acc_u = np.asarray(acc_u, np.int64)
+    e_g = np.asarray(e_g, np.int64)
+    e_u = np.asarray(e_u, np.int64)
+
+    s = e_g + 16
+    sr = np.minimum(np.maximum(-s, 0), 31)
+    sl = np.minimum(np.maximum(s, 0), 31)
+    half = np.where(sr > 0, np.int64(1) << np.maximum(sr - 1, 0), 0)
+    shifted_r = (acc_g + half) >> sr
+    lim = np.int64(_RAW_MAX) >> sl
+    shifted_l = np.where(
+        acc_g > lim, _RAW_MAX, np.where(acc_g < -lim, -_RAW_MAX, acc_g << sl)
+    )
+    gate_q16 = np.where(s >= 0, shifted_l, shifted_r).astype(np.int32)
+
+    sig = sigmoid_ref(gate_q16)
+
+    out = (
+        acc_g.astype(np.float64)
+        * acc_u.astype(np.float64)
+        * sig.astype(np.float64)
+        * np.exp2((e_g + e_u - 16).astype(np.float64))
+    )
+    if return_parts:
+        return out, gate_q16, sig
+    return out
+
+
+def fused_swiglu_ref(x_q, wg_q, wu_q, ea, eg, eu, return_parts: bool = False):
+    """x_q (M,K) int8, wg_q/wu_q (K,F) int8, ea scalar int, eg/eu (F,) int.
+
+    Returns float64 (M, F) — or ``(out, gate_q16, sig)`` with
+    ``return_parts`` for the bit-exact intermediate checks.
+    """
+    x = np.asarray(x_q, np.int64)
+    acc_g = x @ np.asarray(wg_q, np.int64)
+    acc_u = x @ np.asarray(wu_q, np.int64)
+    assert np.all(np.abs(acc_g) < 2**31), "gate accumulation must fit int32"
+    assert np.all(np.abs(acc_u) < 2**31), "up accumulation must fit int32"
+    e_g = int(ea) + np.asarray(eg, np.int64)[None, :]
+    e_u = int(ea) + np.asarray(eu, np.int64)[None, :]
+    return swiglu_body_ref(acc_g, acc_u, e_g, e_u, return_parts=return_parts)

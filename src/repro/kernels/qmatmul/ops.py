@@ -10,13 +10,14 @@
                    used by the FAST training path: quantized forward,
                    float backward.
 
-On this CPU container every call runs the kernel in interpret mode
-(`interpret=True` default); on real TPU pass interpret=False.
+``interpret=None`` auto-detects via ``repro.compat.default_interpret``:
+compiled Mosaic kernels on TPU, interpreter everywhere else.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +29,7 @@ __all__ = ["qmatmul", "qmatmul_q16", "qmatmul_int16", "qdot_ste"]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def qmatmul(a, b, interpret: bool = True):
+def qmatmul(a, b, interpret: Optional[bool] = None):
     """float (M,K) x (K,N) -> float32 (M,N) via the W8A8 fast path."""
     aq = quantize_pow2(a, bits=8, axis=None)
     bq = quantize_pow2(b, bits=8, axis=1)  # per-output-channel
@@ -38,7 +39,7 @@ def qmatmul(a, b, interpret: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def qmatmul_q16(a, b, interpret: bool = True):
+def qmatmul_q16(a, b, interpret: Optional[bool] = None):
     """float x float -> raw Q16.16 int32 output (paper-native type)."""
     aq = quantize_pow2(a, bits=8, axis=None)
     bq = quantize_pow2(b, bits=8, axis=1)
@@ -48,7 +49,7 @@ def qmatmul_q16(a, b, interpret: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def qmatmul_int16(a, b, interpret: bool = True):
+def qmatmul_int16(a, b, interpret: Optional[bool] = None):
     """W8A16: 16-bit activations split into int8 limbs (paper §8.1).
 
     a is quantized to int16 with a per-tensor pow2 scale, then split:
@@ -77,7 +78,7 @@ def qmatmul_int16(a, b, interpret: bool = True):
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def qdot_ste(a, b, interpret: bool = True):
+def qdot_ste(a, b, interpret: Optional[bool] = None):
     """Quantized forward / float backward (straight-through estimator)."""
     return qmatmul(a, b, interpret=interpret)
 

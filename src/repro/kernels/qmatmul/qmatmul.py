@@ -28,13 +28,14 @@ persists across the K steps of one (i, j) tile.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from repro.compat import CompilerParams
+from repro.compat import CompilerParams, default_interpret
 
 __all__ = ["qmatmul_kernel_call", "DEFAULT_BM", "DEFAULT_BN", "DEFAULT_BK"]
 
@@ -107,7 +108,7 @@ def qmatmul_kernel_call(
     bn: int = DEFAULT_BN,
     bk: int = DEFAULT_BK,
     epilogue: str = "float",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """Invoke the Pallas kernel on padded int8 operands.
 
@@ -116,7 +117,10 @@ def qmatmul_kernel_call(
     eb:  (N,) int32 per-channel weight exponents
     Returns (M, N) float32 (epilogue='float') or int32 Q16.16
     (epilogue='q16') or raw int32 (epilogue='int32').
+    ``interpret=None`` auto-detects (compiled on TPU, interpreter off-TPU).
     """
+    if interpret is None:
+        interpret = default_interpret()
     M, K = a_q.shape
     K2, N = b_q.shape
     assert K == K2, (a_q.shape, b_q.shape)

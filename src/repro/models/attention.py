@@ -259,9 +259,9 @@ def attention_forward(
     """
     B, S, _ = x.shape
     h = rms_norm(x, params["norm"], cfg.rms_eps)
-    q = pdot(h, params["wq"], mode).reshape(B, S, cfg.n_heads, cfg.head_dim)
-    k = pdot(h, params["wk"], mode).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
-    v = pdot(h, params["wv"], mode).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    q = pdot(h, params["wq"], mode, wq=params.get("wq_q")).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = pdot(h, params["wk"], mode, wq=params.get("wk_q")).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = pdot(h, params["wv"], mode, wq=params.get("wv_q")).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
 
     sin, cos = rope_tables(positions, cfg.head_dim, cfg.rope_base, mode)
     # head-sharded (TP) layout through attention: keeps every KV chunk
@@ -310,7 +310,7 @@ def attention_forward(
             new_cache["k_exp"] = ek_c
             new_cache["v_exp"] = ev_c
 
-    out = pdot(out.reshape(B, S, cfg.n_heads * cfg.head_dim), params["wo"], mode)
+    out = pdot(out.reshape(B, S, cfg.n_heads * cfg.head_dim), params["wo"], mode, wq=params.get("wo_q"))
     return out, new_cache
 
 
@@ -376,11 +376,11 @@ def mla_forward(params, x, cfg: ModelConfig, *, positions, mode="precise", cache
     nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
 
     h = rms_norm(x, params["norm"], cfg.rms_eps)
-    q_lat = rms_norm(pdot(h, params["wq_a"], mode), params["q_norm"], cfg.rms_eps)
-    q = pdot(q_lat, params["wq_b"], mode).reshape(B, S, H, nope + rope_d)
+    q_lat = rms_norm(pdot(h, params["wq_a"], mode, wq=params.get("wq_a_q")), params["q_norm"], cfg.rms_eps)
+    q = pdot(q_lat, params["wq_b"], mode, wq=params.get("wq_b_q")).reshape(B, S, H, nope + rope_d)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
 
-    kv_a = pdot(h, params["wkv_a"], mode)
+    kv_a = pdot(h, params["wkv_a"], mode, wq=params.get("wkv_a_q"))
     ckv = rms_norm(kv_a[..., : m.kv_lora_rank], params["kv_norm"], cfg.rms_eps)
     k_rope = kv_a[..., m.kv_lora_rank :]  # (B,S,rope_d) shared across heads
 
@@ -437,5 +437,5 @@ def mla_forward(params, x, cfg: ModelConfig, *, positions, mode="precise", cache
         out = out[:, None].astype(x.dtype)  # (B,1,H,vd)
         new_cache = {"ckv": ckv_c, "krope": kr_c, "pos": kp}
 
-    out = pdot(out.reshape(B, S, H * vd), params["wo"], mode)
+    out = pdot(out.reshape(B, S, H * vd), params["wo"], mode, wq=params.get("wo_q"))
     return out, new_cache

@@ -29,6 +29,8 @@ __all__ = [
     "swiglu_mlp",
     "mlp_specs",
     "attn_norm_spec",
+    "WEIGHT_KEYS",
+    "attach_quantized_weights",
 ]
 
 
@@ -186,16 +188,7 @@ def _quant_dims(x, w):
 
 
 @jax.custom_vjp
-def dot_fast_int8(x, w):
-    """W8A8 matmul, kernel-equivalent XLA form: int8 x int8 -> int32 MXU
-    accumulation, ONE deferred power-of-two rescale (paper C3).
-
-    This is the exact computation the Pallas kernel
-    (kernels/qmatmul) performs on real TPU; expressed as
-    ``lax.dot_general(..., preferred_element_type=int32)`` it lowers on
-    every backend and is what the multi-pod dry-run compiles.  Backward
-    is the straight-through estimator (float grads).
-    """
+def _dot_fast(x, w):
     return _dot_fast_fwd_impl(x, w)
 
 
@@ -227,10 +220,79 @@ def _dot_fast_bwd(res, g):
     return gx, gw
 
 
-dot_fast_int8.defvjp(_dot_fast_fwd, _dot_fast_bwd)
+_dot_fast.defvjp(_dot_fast_fwd, _dot_fast_bwd)
 
 
-def pdot(x, w, mode: str = "precise"):
+def _wq_parts(wq):
+    """Normalize a pre-quantized weight operand: QTensor or the
+    ``{"q": int8, "exp": int32}`` dict stored in augmented param trees."""
+    if isinstance(wq, dict):
+        return wq["q"], wq["exp"]
+    return wq.q, wq.exp
+
+
+@jax.custom_vjp
+def _dot_fast_cached(x, w, q, e):
+    return _dot_fast_cached_impl(x, q, e)
+
+
+def _dot_fast_cached_impl(x, q, e):
+    from repro.core.quantization import quantize_pow2
+
+    xq = quantize_pow2(x, bits=8, axis=None)
+    acc = jax.lax.dot_general(
+        xq.q,
+        q,
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    ee = (xq.exp + jnp.asarray(e, jnp.int32).reshape(-1)).astype(jnp.float32)
+    return acc.astype(jnp.float32) * jnp.exp2(ee)
+
+
+def _dot_fast_cached_fwd(x, w, q, e):
+    import numpy as np
+
+    # integer operands carry float0 cotangents; stash them concrete
+    zeros = (
+        np.zeros(q.shape, jax.dtypes.float0),
+        np.zeros(e.shape, jax.dtypes.float0),
+    )
+    return _dot_fast_cached_impl(x, q, e), (x, w, zeros)
+
+
+def _dot_fast_cached_bwd(res, g):
+    x, w, (zq, ze) = res
+    gx, gw = _dot_fast_bwd((x, w), g)
+    return gx, gw, zq, ze
+
+
+_dot_fast_cached.defvjp(_dot_fast_cached_fwd, _dot_fast_cached_bwd)
+
+
+def dot_fast_int8(x, w, wq=None):
+    """W8A8 matmul, kernel-equivalent XLA form: int8 x int8 -> int32 MXU
+    accumulation, ONE deferred power-of-two rescale (paper C3).
+
+    This is the exact computation the Pallas kernel
+    (kernels/qmatmul) performs on real TPU; expressed as
+    ``lax.dot_general(..., preferred_element_type=int32)`` it lowers on
+    every backend and is what the multi-pod dry-run compiles.  Backward
+    is the straight-through estimator (float grads).
+
+    ``wq`` (optional) is a pre-quantized weight operand (QTensor or the
+    ``{"q", "exp"}`` dict a :class:`~repro.core.quantization.\
+QuantizedWeightCache` attaches to param trees): the per-call weight
+    quantization is skipped entirely — bit-identical to the uncached
+    path for the same weights, but the decode loop never requantizes.
+    """
+    if wq is None:
+        return _dot_fast(x, w)
+    q, e = _wq_parts(wq)
+    return _dot_fast_cached(x, w, q, e)
+
+
+def pdot(x, w, mode: str = "precise", wq=None):
     """𝒟[matmul]: FAST -> W8A8 deferred-rescale path; PRECISE -> bf16
     MXU (per-device f32 accumulation is implicit in the TPU MXU).
 
@@ -239,9 +301,11 @@ def pdot(x, w, mode: str = "precise"):
     every backward reshard to fp32 (XLA cannot commute the convert
     through the reduction), doubling collective bytes.  Cross-device
     partial sums in bf16 are the Megatron-standard trade.
+
+    ``wq``: optional cached int8 weights — used by the FAST path only.
     """
     if mode == "fast":
-        return dot_fast_int8(x, w).astype(jnp.bfloat16)
+        return dot_fast_int8(x, w, wq=wq).astype(jnp.bfloat16)
     return jax.lax.dot_general(
         x.astype(jnp.bfloat16),
         w.astype(jnp.bfloat16),
@@ -309,9 +373,84 @@ def attn_norm_spec(d_model: int) -> Spec:
     return Spec((d_model,), ("embed",), init="zeros")
 
 
+def _fused_swiglu_fast(h, wgq, wuq):
+    """Fused FAST hidden stage on cached int8 weights: one x
+    quantization feeding both matmuls, then the kernel-equivalent XLA
+    form (kernels/fused_mlp.fused_swiglu_xla — CORDIC sigmoid on the
+    Q16.16 gate accumulator, ONE combined power-of-two correction).
+    Inference-only: the int8 dots have no VJP; training keeps the
+    per-call STE path below.
+    """
+    from repro.core.quantization import quantize_pow2
+    from repro.kernels.fused_mlp.ops import fused_swiglu_xla
+
+    gq, ge = _wq_parts(wgq)
+    uq, ue = _wq_parts(wuq)
+    xq = quantize_pow2(h, bits=8, axis=None)
+    return fused_swiglu_xla(xq.q, gq, uq, xq.exp, ge, ue)
+
+
 def swiglu_mlp(params, x, mode: str = "precise", eps: float = 1e-5):
+    """SwiGLU MLP with the paper's per-op dispatch.
+
+    FAST with cached quantized weights attached (``w_gate_q`` etc., see
+    :func:`attach_quantized_weights`): the fused hidden stage — one
+    activation quantization, no weight requantization, the activation
+    never round-tripping through bf16 — then the down-projection on the
+    cached int8 ``w_down`` (one more deferred correction).  Otherwise
+    the original three-dispatch path (the training/default route).
+    """
     h = rms_norm(x, params["norm"], eps)
+    if mode == "fast" and "w_gate_q" in params:
+        act = _fused_swiglu_fast(h, params["w_gate_q"], params["w_up_q"])
+        act = act.astype(jnp.bfloat16)
+        return pdot(act, params["w_down"], mode, wq=params["w_down_q"])
     gate = pdot(h, params["w_gate"], mode)
     up = pdot(h, params["w_up"], mode)
     act = psilu(gate.astype(jnp.float32), mode).astype(up.dtype) * up
     return pdot(act, params["w_down"], mode)
+
+
+# ---------------------------------------------------------------------------
+# quantize-once weight attachment (serving FAST path)
+# ---------------------------------------------------------------------------
+
+#: param-dict keys consumed through ``pdot`` / the fused MLP-MoE paths.
+#: (MLA's ``wkv_b`` is read through absorbed-decode einsums, not pdot,
+#: so it stays float.)
+WEIGHT_KEYS = frozenset({
+    "w_gate", "w_up", "w_down",            # MLP + MoE experts
+    "wq", "wk", "wv", "wo",                # attention projections
+    "wq_a", "wq_b", "wkv_a",               # MLA low-rank projections
+    "wz", "wx", "wB", "wC", "wdt",         # Mamba-2 projections
+})
+
+
+def attach_quantized_weights(params, cache, *, level: str = "q16_16"):
+    """Return ``params`` with ``<key>_q = {"q": int8, "exp": int32}``
+    entries added next to every :data:`WEIGHT_KEYS` matrix, quantized
+    ONCE through ``cache`` (a QuantizedWeightCache — normally
+    ``engine.weight_cache``).
+
+    The exponent axes are "everything except the contraction axis"
+    (``ndim-2``): per out-channel for 2-D weights, additionally per
+    period for scanned stacks, per (period, expert) for MoE — so the
+    scanned slice of every added leaf broadcasts exactly like the
+    per-call quantization it replaces.  Float leaves are left in place
+    (precise path, STE backward, and re-attachment after
+    ``engine.invalidate_weights`` all still need them).
+    """
+    def walk(node, path):
+        if isinstance(node, dict):
+            out = {k: walk(v, f"{path}/{k}") for k, v in node.items()}
+            for k in sorted(WEIGHT_KEYS & node.keys()):
+                w = node[k]
+                if not hasattr(w, "ndim") or w.ndim < 2:
+                    continue
+                axis = tuple(i for i in range(w.ndim) if i != w.ndim - 2)
+                qt = cache.get(f"{path}/{k}", w, level=level, axis=axis)
+                out[k + "_q"] = {"q": qt.q, "exp": qt.exp}
+            return out
+        return node
+
+    return walk(params, "")

@@ -53,6 +53,46 @@ def _capacity(T: int, cfg: ModelConfig) -> int:
     return max(8, -(-c // 8) * 8)
 
 
+def _fused_expert_mlp(params, xe):
+    """Fused FAST expert SwiGLU on cached int8 weights (serving path).
+
+    The same single-deferred-correction contract as the dense fused MLP
+    (kernels/fused_mlp): the gathered tokens are quantized ONCE per
+    layer (per-tensor), both expert matmuls run int8 x int8 -> int32
+    with per-(expert, out-channel) cached exponents, the CORDIC sigmoid
+    is applied to the Q16.16 gate accumulator, and each stage applies
+    ONE combined power-of-two correction.  Inference-only (no VJP);
+    training keeps the bf16 einsum + STE route.
+
+    xe: (B, E, C, d) gathered tokens -> (B, E, C, d) expert outputs.
+    """
+    from repro.core.quantization import quantize_pow2
+    from repro.kernels.fused_mlp.fused_mlp import swiglu_body_q16
+
+    gq, ge = params["w_gate_q"]["q"], params["w_gate_q"]["exp"]   # (E,d,f), (E,1,f)
+    uq, ue = params["w_up_q"]["q"], params["w_up_q"]["exp"]
+    dq, de = params["w_down_q"]["q"], params["w_down_q"]["exp"]   # (E,f,d), (E,1,d)
+    E, _, f = gq.shape
+    d = dq.shape[-1]
+
+    xq = quantize_pow2(xe, bits=8, axis=None)
+    # batch over experts: (B,E,C,d) x (E,d,f) -> (E,B,C,f)
+    dims_up = (((3,), (1,)), ((1,), (0,)))
+    acc_g = jax.lax.dot_general(xq.q, gq, dims_up, preferred_element_type=jnp.int32)
+    acc_u = jax.lax.dot_general(xq.q, uq, dims_up, preferred_element_type=jnp.int32)
+    e_g = xq.exp + jnp.asarray(ge, jnp.int32).reshape(E, 1, 1, f)
+    e_u = xq.exp + jnp.asarray(ue, jnp.int32).reshape(E, 1, 1, f)
+    act = swiglu_body_q16(acc_g, acc_u, e_g, e_u)                 # (E,B,C,f) f32
+
+    aq = quantize_pow2(act, bits=8, axis=None)
+    # (E,B,C,f) x (E,f,d) -> (E,B,C,d)
+    dims_down = (((3,), (1,)), ((0,), (0,)))
+    acc_d = jax.lax.dot_general(aq.q, dq, dims_down, preferred_element_type=jnp.int32)
+    e_d = (aq.exp + jnp.asarray(de, jnp.int32).reshape(E, 1, 1, d)).astype(jnp.float32)
+    ye = acc_d.astype(jnp.float32) * jnp.exp2(e_d)
+    return jnp.transpose(ye, (1, 0, 2, 3))                        # (B,E,C,d)
+
+
 def moe_forward(
     params, x, cfg: ModelConfig, mode: str = "precise", constrain=lambda x, kind: x
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -110,10 +150,13 @@ def moe_forward(
 
     # ---- batched expert SwiGLU: weights read ONCE per layer -----------------
     dt = jnp.bfloat16
-    gate = jnp.einsum("becd,edf->becf", xe.astype(dt), params["w_gate"].astype(dt))
-    up = jnp.einsum("becd,edf->becf", xe.astype(dt), params["w_up"].astype(dt))
-    act = psilu(gate.astype(jnp.float32), mode).astype(dt) * up
-    ye = constrain(jnp.einsum("becf,efd->becd", act, params["w_down"].astype(dt)), "moe4d")
+    if mode == "fast" and "w_gate_q" in params:
+        ye = constrain(_fused_expert_mlp(params, xe).astype(dt), "moe4d")
+    else:
+        gate = jnp.einsum("becd,edf->becf", xe.astype(dt), params["w_gate"].astype(dt))
+        up = jnp.einsum("becd,edf->becf", xe.astype(dt), params["w_up"].astype(dt))
+        act = psilu(gate.astype(jnp.float32), mode).astype(dt) * up
+        ye = constrain(jnp.einsum("becf,efd->becd", act, params["w_down"].astype(dt)), "moe4d")
 
     # ---- combine: scatter-add with gate weights ------------------------------
     gate_sorted = jnp.take_along_axis(gate_vals.reshape(B, N), order, axis=-1)

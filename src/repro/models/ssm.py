@@ -156,11 +156,11 @@ def ssm_forward(
     gs = s.n_groups * s.d_state
 
     h = rms_norm(x, params["norm"], cfg.rms_eps)
-    z = pdot(h, params["wz"], mode)
-    xs = pdot(h, params["wx"], mode)
-    Bp = pdot(h, params["wB"], mode)
-    Cp = pdot(h, params["wC"], mode)
-    dt_raw = pdot(h, params["wdt"], mode)
+    z = pdot(h, params["wz"], mode, wq=params.get("wz_q"))
+    xs = pdot(h, params["wx"], mode, wq=params.get("wx_q"))
+    Bp = pdot(h, params["wB"], mode, wq=params.get("wB_q"))
+    Cp = pdot(h, params["wC"], mode, wq=params.get("wC_q"))
+    dt_raw = pdot(h, params["wdt"], mode, wq=params.get("wdt_q"))
 
     conv_in = jnp.concatenate([xs, Bp, Cp], axis=-1)
     conv_out, new_conv = _causal_depthwise_conv(
@@ -197,5 +197,5 @@ def ssm_forward(
     y = y.reshape(B, S, d_in)
     y = y * jax.nn.silu(z.astype(jnp.float32))
     y = rms_norm(y.astype(x.dtype), params["out_norm"], cfg.rms_eps)
-    out = pdot(y, params["wo"], mode)
+    out = pdot(y, params["wo"], mode, wq=params.get("wo_q"))
     return out, new_cache

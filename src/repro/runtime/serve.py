@@ -7,6 +7,15 @@ server can move along the ladder (int8 matmuls + Q-format KV at
 ``q16_16`` <-> IEEE-754 at ``f32``) at request-boundary safety via the
 two-phase barrier — the paper's envelope-based mode choice (§7.2)
 applied to serving.  ``set_mode`` stays as the binary compat alias.
+
+FAST-path weights are quantized ONCE at server build through the
+engine's :class:`~repro.core.quantization.QuantizedWeightCache`
+(``attach_quantized_weights``): the decode step consumes pre-quantized
+int8 payloads and never requantizes a weight, and the MLP hidden stage
+runs the fused single-correction path (kernels/fused_mlp).  Sampling is
+vectorized (``jax.random.categorical``) and the sampled token stays on
+device across decode steps — the only per-token host sync left is the
+(B,)-sized EOS check, and only when ``eos_id`` is configured.
 """
 
 from __future__ import annotations
@@ -21,6 +30,7 @@ import numpy as np
 from repro.core.precision import MathEngine, Mode, PrecisionLevel
 from repro.models import decode_step, init_caches, prefill_step
 from repro.models.config import ModelConfig
+from repro.models.layers import attach_quantized_weights
 
 __all__ = ["ServerConfig", "BatchedServer", "SERVE_STEP_LEVELS"]
 
@@ -44,12 +54,17 @@ class BatchedServer:
     def __init__(self, cfg: ModelConfig, params, scfg: ServerConfig):
         self.cfg = cfg
         self.scfg = scfg
-        self.params = params
         self.engine = MathEngine(scfg.start_mode)
+        # quantize-once: every FAST weight gets its int8 payload here,
+        # keyed in the engine's cache; the original float leaves stay
+        # (precise path + re-attachment after invalidate_weights).
+        self.params = attach_quantized_weights(
+            params, self.engine.weight_cache, level="q16_16"
+        )
         self._build()
 
     def _build(self):
-        cfg, scfg = self.cfg, self.scfg
+        cfg = self.cfg
 
         def make_prefill(mode):
             def fn(params, tokens, caches):
@@ -78,50 +93,63 @@ class BatchedServer:
     def level(self) -> PrecisionLevel:
         return self.engine.level
 
-    def _sample(self, logits: np.ndarray, rng) -> np.ndarray:
+    def _sample(self, logits, key):
+        """Vectorized sampling on device: greedy argmax or one batched
+        ``jax.random.categorical`` — no per-row host loop, no full-vocab
+        logit transfer.  Returns a device (B,) int32."""
         if self.scfg.temperature <= 0:
-            return np.argmax(logits, axis=-1)
-        p = jax.nn.softmax(jnp.asarray(logits) / self.scfg.temperature, axis=-1)
-        return np.array(
-            [rng.choice(p.shape[-1], p=np.asarray(p[i])) for i in range(p.shape[0])]
-        )
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, jnp.asarray(logits, jnp.float32) / self.scfg.temperature, axis=-1
+        ).astype(jnp.int32)
 
     def generate(self, prompts: List[List[int]]) -> List[List[int]]:
         """Greedy/temperature generation for up to max_batch prompts."""
         scfg = self.scfg
         assert len(prompts) <= scfg.max_batch
         B = len(prompts)
-        rng = np.random.default_rng(scfg.seed)
+        key = jax.random.PRNGKey(scfg.seed)
 
         # left-align, right-pad to the longest prompt
         plen = max(len(p) for p in prompts)
         toks = np.zeros((B, plen), np.int32)
         for i, p in enumerate(prompts):
             toks[i, : len(p)] = p
-        lengths = np.array([len(p) for p in prompts], np.int32)
 
         caches = init_caches(self.cfg, B, scfg.max_len)
         logits, caches = self.engine.call("prefill", self.params, jnp.asarray(toks), caches)
-        # note: prefill computes last-position logits; for per-row true
-        # lengths we re-decode the tail tokens of shorter rows below.
-        outs = [list(p) for p in prompts]
-        cur = self._sample(np.asarray(logits, np.float32), rng)
-        pos = np.full((B,), plen, np.int32)
-        active = np.ones((B,), bool)
+        # NB (pre-existing limitation): prefill returns logits at the
+        # common padded last position, so in a mixed-length batch the
+        # first sampled token of a shorter row conditions on its right
+        # padding.  Same-length batches (all current callers) are exact.
+        key, sub = jax.random.split(key)
+        cur = self._sample(logits, sub)          # device (B,), stays there
+        gen = [cur]
+        pos = jnp.full((B,), plen, jnp.int32)    # device; rows move lock-step
+        eos = scfg.eos_id
+        done = np.zeros((B,), bool)
 
-        for _ in range(scfg.max_new):
-            for i in range(B):
-                if active[i]:
-                    outs[i].append(int(cur[i]))
-                    if scfg.eos_id is not None and cur[i] == scfg.eos_id:
-                        active[i] = False
-            if not active.any() or pos.max() + 1 >= scfg.max_len:
+        for step in range(scfg.max_new - 1):
+            if eos is not None:
+                # the one remaining per-token sync: a (B,) token pull
+                done |= np.asarray(gen[-1]) == eos
+                if done.all():
+                    break
+            if plen + step + 1 >= scfg.max_len:
                 break
             logits, caches = self.engine.call(
-                "decode", self.params, jnp.asarray(cur[:, None].astype(np.int32)),
-                jnp.asarray(pos), caches,
+                "decode", self.params, gen[-1][:, None], pos, caches
             )
-            cur = self._sample(np.asarray(logits, np.float32), rng)
+            key, sub = jax.random.split(key)
+            gen.append(self._sample(logits, sub))
             pos = pos + 1
 
+        # single bulk device->host transfer after the loop
+        mat = np.stack([np.asarray(g) for g in gen], axis=1)  # (B, T)
+        outs = []
+        for i, p in enumerate(prompts):
+            row = mat[i].tolist()
+            if eos is not None and eos in row:
+                row = row[: row.index(eos) + 1]
+            outs.append(list(p) + row)
         return outs
