@@ -1,0 +1,94 @@
+"""CI perf-trajectory gate for the serving engine.
+
+Compares a fresh ``BENCH_serving.json`` (written by
+``benchmarks/run.py --json``) against the checked-in baseline and
+FAILS (exit 1) when either serving-perf invariant breaks:
+
+1. **relative**: continuous-batching tokens/s must not LOSE to the
+   static lock-step server on the mixed-length workload (with a 5%
+   tie-break grace for shared-runner noise) — this is the
+   machine-independent relation the scheduler exists to win, so it
+   gates unconditionally;
+2. **trajectory**: continuous-batching tokens/s must not regress more
+   than ``--tolerance`` (default 20%) against the checked-in baseline.
+   Absolute tokens/s are host-dependent, so the trajectory check
+   compares the continuous/static SPEEDUP ratio by default (stable
+   across runner generations); pass ``--absolute`` to compare raw
+   tokens/s against a baseline recorded on identical hardware.
+
+Refreshing the baseline after an intentional change: copy the CI
+artifact (or a local ``--json`` run's output) over
+``benchmarks/baselines/BENCH_serving.json`` and commit it.
+
+Usage:
+    python benchmarks/check_serving_regression.py \
+        --current BENCH_serving.json \
+        [--baseline benchmarks/baselines/BENCH_serving.json] \
+        [--tolerance 0.2] [--absolute]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_BASELINE = Path(__file__).parent / "baselines" / "BENCH_serving.json"
+
+
+def check(current: dict, baseline: dict, tolerance: float, absolute: bool) -> list:
+    failures = []
+
+    cont = current["continuous_tokens_per_s"]
+    static = current["static_tokens_per_s"]
+    # 5% grace: the invariant is "continuous does not lose", but a
+    # zero-tolerance tie-break on shared CI runners is a flake source.
+    if cont < static * 0.95:
+        failures.append(
+            f"continuous batching LOSES to the static server: "
+            f"{cont:.1f} < {static:.1f} tokens/s (speedup {cont / static:.2f}x)"
+        )
+
+    if absolute:
+        base, cur, what = baseline["continuous_tokens_per_s"], cont, "continuous tokens/s"
+    else:
+        base, cur, what = baseline["speedup"], current["speedup"], "continuous/static speedup"
+    if cur < base * (1.0 - tolerance):
+        failures.append(
+            f"{what} regressed >{tolerance:.0%} vs baseline: "
+            f"{cur:.3f} < {base:.3f} * {1 - tolerance:.2f}"
+        )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
+    ap.add_argument("--tolerance", type=float, default=0.2)
+    ap.add_argument("--absolute", action="store_true",
+                    help="compare raw tokens/s instead of the speedup ratio")
+    args = ap.parse_args(argv)
+
+    current = json.loads(Path(args.current).read_text())
+    baseline = json.loads(Path(args.baseline).read_text())
+
+    if current.get("workload") != baseline.get("workload"):
+        print("NOTE: workload changed since baseline was recorded — "
+              "trajectory comparison is apples-to-oranges; refresh the baseline.",
+              file=sys.stderr)
+
+    failures = check(current, baseline, args.tolerance, args.absolute)
+    print(
+        f"serving perf: static={current['static_tokens_per_s']:.1f} tok/s, "
+        f"continuous={current['continuous_tokens_per_s']:.1f} tok/s "
+        f"(speedup {current['speedup']:.2f}x; baseline {baseline['speedup']:.2f}x)"
+    )
+    for f in failures:
+        print(f"SERVING PERF FAIL: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,12 +1,16 @@
 """Benchmark harness entrypoint: one section per paper table/figure +
 the roofline cell summary.  Prints ``name,us_per_call,derived`` CSV.
 
-Run:  PYTHONPATH=src python -m benchmarks.run [--section trig|universal|mul|matmul|switch|fused_mlp|roofline|all]
+Run:  PYTHONPATH=src python -m benchmarks.run [--section trig|universal|mul|matmul|switch|fused_mlp|serving|roofline|all]
 
-``--json`` additionally records the fused-MLP perf trajectory: writes
+``--json`` additionally records the perf trajectories: writes
 ``BENCH_fused_mlp.json`` (fused/unfused/precise medians at the
-configs/ MLP shapes + smoke-model decode tokens/s) next to the CSV
-output, so successive PRs accumulate comparable numbers.
+configs/ MLP shapes + smoke-model decode tokens/s) AND
+``BENCH_serving.json`` (static vs continuous-batching tokens/s on the
+mixed-length serving workload — gated in CI by
+benchmarks/check_serving_regression.py against the checked-in
+baseline) next to the CSV output, so successive PRs accumulate
+comparable numbers.
 """
 
 import argparse
@@ -17,7 +21,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 sys.path.insert(0, str(Path(__file__).parent.parent))
 
-from benchmarks import bench_paper_tables, roofline  # noqa: E402
+from benchmarks import bench_paper_tables, bench_serving, roofline  # noqa: E402
 
 
 def main() -> None:
@@ -27,7 +31,8 @@ def main() -> None:
         "--json", nargs="?", const="BENCH_fused_mlp.json", default=None,
         metavar="PATH",
         help="also write the fused-MLP medians + decode tokens/s as JSON "
-             "(default path: BENCH_fused_mlp.json)",
+             "(default path: BENCH_fused_mlp.json); BENCH_serving.json is "
+             "written next to it",
     )
     args = ap.parse_args()
 
@@ -39,6 +44,7 @@ def main() -> None:
         "switch": bench_paper_tables.bench_switch,
         "ladder": bench_paper_tables.bench_ladder_switch,
         "fused_mlp": bench_paper_tables.bench_fused_mlp,
+        "serving": bench_serving.bench_serving,
         "footprint": bench_paper_tables.bench_footprint,
         "deferred": bench_paper_tables.bench_deferred_error,
         "roofline": roofline.run,
@@ -49,12 +55,17 @@ def main() -> None:
         out_path = args.json or "BENCH_fused_mlp.json"
         Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
         print(f"wrote {out_path}", file=sys.stderr)
+        serving_payload = bench_serving.serving_json()
+        serving_path = Path(out_path).parent / "BENCH_serving.json"
+        serving_path.write_text(json.dumps(serving_payload, indent=2) + "\n")
+        print(f"wrote {serving_path}", file=sys.stderr)
         if args.section == "json-only":
             return
-        # the JSON payload already ran the fused-MLP suite — don't pay
-        # for it twice in the same invocation
+        # the JSON payloads already ran those suites — don't pay for
+        # them twice in the same invocation
         sections.pop("fused_mlp", None)
-        if args.section == "fused_mlp":
+        sections.pop("serving", None)
+        if args.section in ("fused_mlp", "serving"):
             return
 
     todo = sections.values() if args.section == "all" else [sections[args.section]]

@@ -2,6 +2,11 @@
 
 Smoke (CPU):
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2_2b --smoke
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2_2b --continuous
+
+``--continuous`` runs the continuous-batching engine (slot-paged pool,
+per-request precision via ``--levels``) on a mixed-length/mixed-budget
+workload; the default runs the static lock-step ``BatchedServer``.
 """
 
 from __future__ import annotations
@@ -17,21 +22,52 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--mode", default="precise", choices=["precise", "fast"])
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching engine instead of the static server")
+    ap.add_argument("--slots", type=int, default=2,
+                    help="device batch slots for --continuous")
+    ap.add_argument("--levels", default=None,
+                    help="comma list of per-request ladder levels for --continuous "
+                         "(cycled over requests; e.g. 'q16_16,f32')")
     args = ap.parse_args()
 
     from repro.configs import smoke
     from repro.core.precision import Mode
     from repro.models import init_params
-    from repro.runtime.serve import BatchedServer, ServerConfig
+    from repro.runtime.scheduler import Request
+    from repro.runtime.serve import (
+        BatchedServer,
+        ContinuousBatchingServer,
+        ContinuousServerConfig,
+        ServerConfig,
+    )
 
     cfg = smoke(args.arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [[1, 2, 3, 4, 5], [10, 11, 12], [7, 7, 7, 7], [3, 1, 4, 1, 5, 9]]
+
+    if args.continuous:
+        srv = ContinuousBatchingServer(
+            cfg, params, ContinuousServerConfig(n_slots=args.slots, max_len=128)
+        )
+        levels = args.levels.split(",") if args.levels else [None]
+        reqs = [
+            Request(rid=srv.next_rid(), prompt=p, max_new=args.max_new + 4 * (i % 2),
+                    level=levels[i % len(levels)])
+            for i, p in enumerate(prompts)
+        ]
+        fins = srv.serve(reqs)
+        for r in reqs:
+            f = fins[r.rid]
+            print(f"req{r.rid} [{r.level or 'default'}] ({f.reason}): {f.tokens}")
+        print(f"stats: {srv.stats}")
+        return
+
     srv = BatchedServer(
         cfg, params,
         ServerConfig(max_batch=4, max_len=128, max_new=args.max_new,
                      start_mode=Mode(args.mode)),
     )
-    prompts = [[1, 2, 3, 4, 5], [10, 11, 12], [7, 7, 7, 7], [3, 1, 4, 1, 5, 9]]
     for i, seq in enumerate(srv.generate(prompts)):
         print(f"req{i}: {seq}")
 

@@ -17,5 +17,7 @@ from repro.models.model import (
     init_params,
     param_specs,
     prefill_step,
+    reset_cache_slot,
     train_loss,
+    write_cache_slot,
 )

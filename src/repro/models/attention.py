@@ -36,6 +36,8 @@ __all__ = [
     "mla_forward",
     "init_attn_cache",
     "init_mla_cache",
+    "reset_attn_cache_slot",
+    "reset_mla_cache_slot",
 ]
 
 NEG_INF = -1e30
@@ -225,6 +227,24 @@ def init_attn_cache(
         out["k_exp"] = jnp.zeros((batch, L, kv), jnp.int32)
         out["v_exp"] = jnp.zeros((batch, L, kv), jnp.int32)
     return out
+
+
+def reset_attn_cache_slot(cache: dict, slot) -> dict:
+    """Reset one batch slot of a KV cache for continuous-batching
+    admission.  Payloads zero; the per-slot position tensor goes back
+    to -1 (unwritten) so the next occupant's decode mask cannot attend
+    to the evicted request's residue.  ``slot`` may be traced."""
+    out = {}
+    for k, v in cache.items():
+        fill = jnp.full(v.shape[1:], -1, v.dtype) if k == "pos" else jnp.zeros(v.shape[1:], v.dtype)
+        out[k] = v.at[slot].set(fill)
+    return out
+
+
+def reset_mla_cache_slot(cache: dict, slot) -> dict:
+    """MLA variant of :func:`reset_attn_cache_slot` (latent ckv/krope
+    payloads + the same -1 position sentinel)."""
+    return reset_attn_cache_slot(cache, slot)
 
 
 def _q8_exp(x, axes):

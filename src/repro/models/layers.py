@@ -294,21 +294,34 @@ QuantizedWeightCache` attaches to param trees): the per-call weight
 
 def pdot(x, w, mode: str = "precise", wq=None):
     """𝒟[matmul]: FAST -> W8A8 deferred-rescale path; PRECISE -> bf16
-    MXU (per-device f32 accumulation is implicit in the TPU MXU).
+    MXU (per-device f32 accumulation is implicit in the TPU MXU);
+    EXACT -> f32 end-to-end (serving-consistency mode, see below).
 
-    Deliberately bf16-in/bf16-out with NO preferred_element_type=f32 +
-    downcast: that pattern pins every TP partial-sum all-reduce and
-    every backward reshard to fp32 (XLA cannot commute the convert
-    through the reduction), doubling collective bytes.  Cross-device
-    partial sums in bf16 are the Megatron-standard trade.
+    Deliberately bf16-in/bf16-out on the PRECISE path, with NO
+    preferred_element_type=f32 + downcast: that pattern pins every TP
+    partial-sum all-reduce and every backward reshard to fp32 (XLA
+    cannot commute the convert through the reduction), doubling
+    collective bytes.  Cross-device partial sums in bf16 are the
+    Megatron-standard trade.
+
+    EXACT is the *serving* precise path (runtime/serve maps the ``f32``
+    ladder level here): a bf16-rounded output quantizes the tiny
+    shape-dependent accumulation differences between a (B, S) prefill
+    gemm and a (B, 1) decode gemm up to a full bf16 ulp — and at
+    hybrid-depth residual magnitudes one residual-stream ulp is O(10),
+    which is what made jamba's decode drift from its own prefill
+    re-derivation (ROADMAP "Known-failing tier-1 tests").  Keeping the
+    serving matmuls in f32 keeps that noise at f32 scale, so greedy
+    decode agrees with prefill re-derivation across all families.
 
     ``wq``: optional cached int8 weights — used by the FAST path only.
     """
     if mode == "fast":
         return dot_fast_int8(x, w, wq=wq).astype(jnp.bfloat16)
+    dt = jnp.float32 if mode == "exact" else jnp.bfloat16
     return jax.lax.dot_general(
-        x.astype(jnp.bfloat16),
-        w.astype(jnp.bfloat16),
+        x.astype(dt),
+        w.astype(dt),
         dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
     )
 

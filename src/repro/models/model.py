@@ -34,6 +34,8 @@ __all__ = [
     "train_loss",
     "prefill_step",
     "decode_step",
+    "reset_cache_slot",
+    "write_cache_slot",
 ]
 
 Constrain = Callable[[jnp.ndarray, str], jnp.ndarray]
@@ -82,6 +84,40 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
     one = init_period_cache(cfg, batch, max_len, dtype, quantized=quantized)
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (cfg.n_periods,) + x.shape).copy(), one
+    )
+
+
+def reset_cache_slot(caches, cfg: ModelConfig, slot):
+    """Reset ONE batch slot of a stacked cache pool (leaves are
+    (n_periods, batch, ...)) to its freshly-initialized state.
+
+    Continuous-batching admission hygiene: an evicted request's KV rows,
+    position sentinels, SSM state and conv history must never leak into
+    the slot's next occupant.  Dispatches to the per-layer resets
+    (:func:`~repro.models.attention.reset_attn_cache_slot` etc., vmapped
+    over the stacked period axis).  ``slot`` may be traced — jit-safe.
+    """
+    from repro.models import attention as attn
+    from repro.models import ssm as ssm_mod
+
+    reset_fn = {"attn": attn.reset_attn_cache_slot,
+                "mla": attn.reset_mla_cache_slot,
+                "mamba": ssm_mod.reset_ssm_cache_slot}
+    out = {}
+    for i, spec in enumerate(cfg.period):
+        fn = reset_fn[spec.kind]
+        out[f"pos{i}"] = jax.vmap(lambda c, fn=fn: fn(c, slot))(caches[f"pos{i}"])
+    return out
+
+
+def write_cache_slot(pool, single, slot):
+    """Scatter a single-request cache tree (leaves (n_periods, 1, ...))
+    into batch slot ``slot`` of a stacked pool — the admission write of
+    a freshly prefilled request.  The single cache is fully populated
+    from a zero init, so the write itself is also a complete reset of
+    the slot.  ``slot`` may be traced — jit-safe."""
+    return jax.tree.map(
+        lambda p, s: p.at[:, slot].set(s[:, 0].astype(p.dtype)), pool, single
     )
 
 
@@ -247,15 +283,24 @@ def prefill_step(
     constrain: Constrain = _id,
     extra_embeds=None,
 ):
-    """tokens (B,S) from position 0; returns (last_logits (B,V), caches')."""
+    """tokens (B,S) from position 0; returns (last_logits (B,V), caches').
+
+    mode="exact" (serving): f32 residual stream and f32 head so the
+    prefill and decode derivations of the same prefix agree to f32
+    noise — bf16 rounding of an O(1e3) hybrid residual stream costs a
+    full ulp (O(10)) per store and broke jamba's greedy consistency.
+    """
     B, S = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
     x = _embed(params, tokens, cfg, extra_embeds)
+    if mode == "exact":
+        x = x.astype(jnp.float32)
     x, new_caches = _scan_with_caches(params, x, caches, cfg, positions, mode, constrain, prefill=True)
     x = rms_norm(x[:, -1:], params["final_norm"], cfg.rms_eps)
+    head_dt = jnp.float32 if mode == "exact" else jnp.bfloat16
     logits = jnp.dot(
-        x[:, 0].astype(jnp.bfloat16),
-        _lm_head(params, cfg).astype(jnp.bfloat16),
+        x[:, 0].astype(head_dt),
+        _lm_head(params, cfg).astype(head_dt),
         preferred_element_type=jnp.float32,
     )
     return softcap(logits, cfg.final_softcap, mode), new_caches
@@ -269,16 +314,34 @@ def decode_step(
     cfg: ModelConfig,
     mode: str = "precise",
     constrain: Constrain = _id,
+    lane_mask=None,
 ):
-    """token (B,1) at scalar-per-batch ``position`` (B,) -> (logits, caches')."""
+    """token (B,1) at scalar-per-batch ``position`` (B,) -> (logits, caches').
+
+    mode="exact": see :func:`prefill_step` — the serving-consistency
+    f32 path.
+
+    ``lane_mask`` (B,) zeroes non-member lanes at the embedding.  The
+    continuous-batching server passes its slot mask here: the FAST
+    path's PER-TENSOR activation exponents take their amax over the
+    whole batch, so without the mask an f32 neighbor's activations
+    would perturb a q16_16 request's quantization — masked, a pass's
+    input tensor is independent of what the other lanes hold, which is
+    what makes a slot's output identical to running it alone.
+    """
     B = token.shape[0]
     positions = position.reshape(B, 1).astype(jnp.int32)
     x = _embed(params, token, cfg)
+    if mode == "exact":
+        x = x.astype(jnp.float32)
+    if lane_mask is not None:
+        x = x * lane_mask.astype(x.dtype)[:, None, None]
     x, new_caches = _scan_with_caches(params, x, caches, cfg, positions, mode, constrain, prefill=False)
     x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head_dt = jnp.float32 if mode == "exact" else jnp.bfloat16
     logits = jnp.dot(
-        x[:, 0].astype(jnp.bfloat16),
-        _lm_head(params, cfg).astype(jnp.bfloat16),
+        x[:, 0].astype(head_dt),
+        _lm_head(params, cfg).astype(head_dt),
         preferred_element_type=jnp.float32,
     )
     return softcap(logits, cfg.final_softcap, mode), new_caches

@@ -149,7 +149,10 @@ def moe_forward(
     xe = constrain(xe, "moe4d")
 
     # ---- batched expert SwiGLU: weights read ONCE per layer -----------------
-    dt = jnp.bfloat16
+    # "exact" (serving) keeps the expert path in f32: a bf16 expert
+    # round-trip re-quantizes prefill-vs-decode noise to bf16 ulps,
+    # which top-k routing then amplifies into discrete flips.
+    dt = jnp.float32 if mode == "exact" else jnp.bfloat16
     if mode == "fast" and "w_gate_q" in params:
         ye = constrain(_fused_expert_mlp(params, xe).astype(dt), "moe4d")
     else:

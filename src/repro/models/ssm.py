@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.models.config import ModelConfig
 from repro.models.layers import Spec, attn_norm_spec, pdot, rms_norm
 
-__all__ = ["ssm_specs", "ssm_forward", "init_ssm_cache"]
+__all__ = ["ssm_specs", "ssm_forward", "init_ssm_cache", "reset_ssm_cache_slot"]
 
 
 def ssm_specs(cfg: ModelConfig) -> dict:
@@ -60,6 +60,16 @@ def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
     return {
         "state": jnp.zeros((batch, nh, s.d_state, s.head_dim), dtype),
         "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def reset_ssm_cache_slot(cache: dict, slot) -> dict:
+    """Zero one batch slot of an SSM cache (continuous-batching
+    admission: the recurrent state and conv history of the evicted
+    request must not leak into the next occupant).  ``slot`` may be a
+    traced int32 — jit-safe."""
+    return {
+        k: v.at[slot].set(jnp.zeros(v.shape[1:], v.dtype)) for k, v in cache.items()
     }
 
 
@@ -168,8 +178,11 @@ def ssm_forward(
         carry=None if (cache is None or prefill) else cache["conv"],
     )
     # silu in f32, stored bf16: at S=32k the (B, S, conv_dim) buffers
-    # are GiB-scale per mamba layer (7/period for jamba) — §Perf P6
-    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(jnp.bfloat16)
+    # are GiB-scale per mamba layer (7/period for jamba) — §Perf P6.
+    # "exact" (serving) skips the bf16 round-trip so decode's conv
+    # output is bit-aligned with prefill's (decode S=1 buffers are tiny).
+    conv_dt = jnp.float32 if mode == "exact" else jnp.bfloat16
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(conv_dt)
     xs = constrain(conv_out[..., :d_in].reshape(B, S, nh, s.head_dim), "heads4d")
     Bp = conv_out[..., d_in : d_in + gs]
     Cp = conv_out[..., d_in + gs :]

@@ -1,42 +1,104 @@
-"""Batched serving runtime: prefill + decode on the precision ladder.
+"""Serving runtime: static batching + continuous batching on the
+precision ladder.
 
-Static batching: up to ``max_batch`` prompts are padded to a common
-length, prefilled together, then decoded lock-step until ``max_new``
-or EOS.  The decode step dispatches through the MathEngine, so a
-server can move along the ladder (int8 matmuls + Q-format KV at
-``q16_16`` <-> IEEE-754 at ``f32``) at request-boundary safety via the
-two-phase barrier — the paper's envelope-based mode choice (§7.2)
-applied to serving.  ``set_mode`` stays as the binary compat alias.
+Two servers share the per-level step registrations:
+
+:class:`BatchedServer` (static batching, the original engine): up to
+``max_batch`` prompts are padded to a common length, prefilled
+together, then decoded lock-step until ``max_new`` or EOS.  Every lane
+runs at the server's single current level; switching happens at
+request-boundary safety via the two-phase barrier (``set_level``).
+
+:class:`ContinuousBatchingServer` (the serving engine): a fixed device
+batch of ``n_slots`` lanes over a slot-paged KV/SSM pool allocated
+ONCE at build.  A :class:`~repro.runtime.scheduler.ContinuousScheduler`
+interleaves per-request prefill (admission) with pool decode steps;
+finished requests are evicted and their slots re-filled immediately, so
+short requests never wait for long ones.  Each slot carries its own
+ladder level — per-REQUEST precision — driven by a vectorized
+:class:`~repro.core.arbiter.SlotArbiter` on the request's own
+NaN/amplitude signals, and dispatched through the jit-safe
+``engine.switched`` traced-index path: mixed-precision batches run with
+ZERO retraces (one compiled pool step per active level per decode
+step, merged by an on-device slot mask).
+
+Migration (``BatchedServer`` -> scheduler engine):
+
+=====================================  =====================================
+static ``BatchedServer``               ``ContinuousBatchingServer``
+=====================================  =====================================
+``generate(prompts)`` lock-step wave   ``serve([Request(...)])`` streaming
+one level for the whole batch          per-request ``Request.level`` +
+                                       arbiter escalation per slot
+padded common-length prefill           exact-length per-request prefill
+(shorter rows see right padding)       (no padding artifacts)
+decode until longest request           per-request ``max_new``; slot freed
+                                       at EOS/budget and refilled
+caches rebuilt per ``generate`` call   slot-paged pool allocated once
+=====================================  =====================================
+
+Precision levels: the ``f32`` rung maps to the model-layer ``"exact"``
+mode (f32 residual stream/matmuls/head — see
+:func:`repro.models.layers.pdot`), which is what makes greedy decode
+agree with its own prefill re-derivation even for deep hybrid stacks
+(jamba).  Serving caches are f32 for the same reason: prefill attends
+to its freshly computed k/v, decode to the cache — a bf16 cache would
+round one side only.  The FAST memory path (int8 Q-format KV) is
+orthogonal and unaffected.
 
 FAST-path weights are quantized ONCE at server build through the
 engine's :class:`~repro.core.quantization.QuantizedWeightCache`
-(``attach_quantized_weights``): the decode step consumes pre-quantized
-int8 payloads and never requantizes a weight, and the MLP hidden stage
-runs the fused single-correction path (kernels/fused_mlp).  Sampling is
-vectorized (``jax.random.categorical``) and the sampled token stays on
-device across decode steps — the only per-token host sync left is the
-(B,)-sized EOS check, and only when ``eos_id`` is configured.
+(``attach_quantized_weights``): decode consumes pre-quantized int8
+payloads and never requantizes a weight, and the MLP hidden stage runs
+the fused single-correction path (kernels/fused_mlp).  Sampling is
+vectorized (``jax.random.categorical``) on device.  Host-sync budget:
+with ``eos_id`` set, one (B, 3) pull per step — sampled token, finite
+flag, logit amplitude — serves the EOS check AND the per-slot arbiter
+signals in a single transfer; without ``eos_id`` the decode loop
+dispatches fully async (tokens accumulate in a device ring, pulled
+once per request at eviction; health syncs on a configurable cadence).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.arbiter import SlotArbiter, SlotArbiterConfig
 from repro.core.precision import MathEngine, Mode, PrecisionLevel
-from repro.models import decode_step, init_caches, prefill_step
+from repro.models import (
+    decode_step,
+    init_caches,
+    prefill_step,
+    reset_cache_slot,
+    write_cache_slot,
+)
 from repro.models.config import ModelConfig
 from repro.models.layers import attach_quantized_weights
+from repro.runtime.scheduler import ContinuousScheduler, FinishedRequest, Request
 
-__all__ = ["ServerConfig", "BatchedServer", "SERVE_STEP_LEVELS"]
+__all__ = [
+    "ServerConfig",
+    "BatchedServer",
+    "ContinuousServerConfig",
+    "ContinuousBatchingServer",
+    "SERVE_STEP_LEVELS",
+]
 
 #: engine levels the serve steps are implemented at -> model-layer
-#: dispatch string (models/* speak the binary vocabulary at matmul level).
-SERVE_STEP_LEVELS = (("q16_16", "fast"), ("f32", "precise"))
+#: dispatch string.  The precise rung runs the models' "exact" (f32
+#: serving) mode rather than the bf16 training mode — see module
+#: docstring.
+SERVE_STEP_LEVELS = (("q16_16", "fast"), ("f32", "exact"))
+
+#: serving caches are f32 (bf16 would round the decode side of the
+#: prefill/decode consistency contract only); quantized KV stays the
+#: FAST-path memory option.
+SERVE_CACHE_DTYPE = jnp.float32
 
 
 @dataclasses.dataclass
@@ -51,6 +113,11 @@ class ServerConfig:
 
 
 class BatchedServer:
+    """Static batching (see module docstring for the migration table to
+    :class:`ContinuousBatchingServer`, which supersedes this for mixed
+    workloads — this class remains the lock-step baseline and the
+    simplest correctness oracle)."""
+
     def __init__(self, cfg: ModelConfig, params, scfg: ServerConfig):
         self.cfg = cfg
         self.scfg = scfg
@@ -116,12 +183,13 @@ class BatchedServer:
         for i, p in enumerate(prompts):
             toks[i, : len(p)] = p
 
-        caches = init_caches(self.cfg, B, scfg.max_len)
+        caches = init_caches(self.cfg, B, scfg.max_len, dtype=SERVE_CACHE_DTYPE)
         logits, caches = self.engine.call("prefill", self.params, jnp.asarray(toks), caches)
-        # NB (pre-existing limitation): prefill returns logits at the
+        # NB (static-batching limitation): prefill returns logits at the
         # common padded last position, so in a mixed-length batch the
         # first sampled token of a shorter row conditions on its right
-        # padding.  Same-length batches (all current callers) are exact.
+        # padding.  Same-length batches are exact; mixed-length traffic
+        # belongs on ContinuousBatchingServer (exact-length prefill).
         key, sub = jax.random.split(key)
         cur = self._sample(logits, sub)          # device (B,), stays there
         gen = [cur]
@@ -153,3 +221,419 @@ class BatchedServer:
                 row = row[: row.index(eos) + 1]
             outs.append(list(p) + row)
         return outs
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ContinuousServerConfig:
+    n_slots: int = 4
+    max_len: int = 256
+    eos_id: Optional[int] = None
+    temperature: float = 0.0          # 0 = greedy
+    default_level: str = "f32"        # level for requests without their own
+    seed: int = 0
+    #: health-signal sync cadence (decode steps) when NO eos_id is set.
+    #: With eos_id the per-step (B, 3) EOS pull carries the signals for
+    #: free; without it the loop is fully async and the arbiter sees
+    #: device-accumulated signals every ``health_sync_every`` steps.
+    health_sync_every: int = 8
+    arbiter: SlotArbiterConfig = dataclasses.field(
+        default_factory=lambda: SlotArbiterConfig(n_levels=len(SERVE_STEP_LEVELS))
+    )
+
+
+class ContinuousBatchingServer:
+    """Continuous-batching engine with per-request precision.
+
+    Device state (allocated once at build):
+
+    * ``pool``  — stacked cache pytree for ``n_slots`` lanes x
+      ``max_len`` (the slot-paged KV/SSM pool);
+    * ``_tok`` / ``_pos`` — (n_slots,) current token / next position.
+
+    Host state: the :class:`ContinuousScheduler` (queue + slot table +
+    token bookkeeping) and the :class:`SlotArbiter` (per-slot ladder
+    indices).
+
+    One decode step runs the jitted pool step once per DISTINCT active
+    level: the level is a traced ``lax.switch`` index (zero retraces),
+    and each pass merges its slots' logits and cache rows under an
+    on-device occupancy mask, so a batch mixing ``q16_16`` and ``f32``
+    requests costs one compiled executable, not one compile per mix.
+
+    Isolation contract (pinned by tests/test_scheduler.py): every
+    lane's computation is row-independent (attention, SSD, batch-local
+    MoE routing all operate per batch row), and each pass zeroes
+    non-member lanes at the input (``lane_mask``) so the FAST path's
+    per-TENSOR activation exponents cannot couple a request to other
+    levels' lanes or to evicted residue — a request's output is
+    therefore identical to serving it alone at its level.  (Multiple
+    FAST requests decoding in the SAME pass still share one activation
+    exponent; per-row activation scales are the noted next step.)
+    """
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ContinuousServerConfig):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.level_names = tuple(lv for lv, _ in SERVE_STEP_LEVELS)
+        if scfg.default_level not in self.level_names:
+            raise ValueError(
+                f"default_level {scfg.default_level!r} not in {self.level_names}"
+            )
+        if scfg.arbiter.n_levels != len(self.level_names):
+            raise ValueError("arbiter ladder size must match SERVE_STEP_LEVELS")
+        self.engine = MathEngine(scfg.default_level)
+        self.params = attach_quantized_weights(
+            params, self.engine.weight_cache, level="q16_16"
+        )
+        if scfg.health_sync_every < 1:
+            raise ValueError("health_sync_every must be >= 1")
+        # the slot-paged KV/SSM-state pool: allocated once, reused across
+        # every request the server ever serves
+        self.pool = init_caches(cfg, scfg.n_slots, scfg.max_len, dtype=SERVE_CACHE_DTYPE)
+        self._tok = jnp.zeros((scfg.n_slots,), jnp.int32)
+        self._pos = jnp.zeros((scfg.n_slots,), jnp.int32)
+        # generated tokens stay ON DEVICE in a per-slot ring (pulled
+        # once per request at eviction); health signals accumulate
+        # on device between syncs ([finite_and, amp_max] per slot).
+        self._gen_buf = jnp.zeros((scfg.n_slots, scfg.max_len), jnp.int32)
+        self._gen_count = jnp.zeros((scfg.n_slots,), jnp.int32)
+        self._health = jnp.tile(jnp.asarray([1.0, 0.0], jnp.float32), (scfg.n_slots, 1))
+        self.scheduler = ContinuousScheduler(
+            scfg.n_slots, scfg.max_len, scfg.eos_id, levels=self.level_names
+        )
+        self.arbiter = SlotArbiter(scfg.n_slots, scfg.arbiter)
+        self._key = jax.random.PRNGKey(scfg.seed)
+        self._step = 0
+        self._rid_counter = 0
+        self.stats = {"decode_steps": 0, "level_passes": 0, "prefills": 0}
+        self._build()
+
+    # -- jitted step functions ---------------------------------------------
+
+    def _build(self):
+        cfg = self.cfg
+        temperature = self.scfg.temperature
+
+        def make_prefill(mode):
+            def fn(params, tokens, caches):
+                return prefill_step(params, tokens, caches, cfg, mode=mode)
+            return fn
+
+        def make_decode(mode):
+            # lane_mask zeroes non-member lanes so a pass's input tensor
+            # (and therefore the FAST path's per-tensor activation
+            # exponents) is independent of the other slots' contents —
+            # the slot-isolation contract (see models.decode_step).
+            def fn(params, tok, pos, caches, lane_mask):
+                return decode_step(
+                    params, tok, pos, caches, cfg, mode=mode, lane_mask=lane_mask
+                )
+            return fn
+
+        self.engine.register(
+            "prefill", **{lv: make_prefill(m) for lv, m in SERVE_STEP_LEVELS}
+        )
+        self.engine.register(
+            "decode", **{lv: make_decode(m) for lv, m in SERVE_STEP_LEVELS}
+        )
+        pre_disp, _ = self.engine.switched("prefill", levels=self.level_names)
+        dec_disp, _ = self.engine.switched("decode", levels=self.level_names)
+
+        def merge_caches(old, new, mask):
+            """Keep ``new`` cache rows only where ``mask`` is set."""
+            def leaf(o, n):
+                m = mask.reshape((1, -1) + (1,) * (n.ndim - 2))
+                return jnp.where(m, n.astype(o.dtype), o)
+            return jax.tree.map(leaf, old, new)
+
+        def mask_cache_view(caches, mask):
+            """Non-member lanes see a PRISTINE cache: zero payloads,
+            pos sentinel -1 (the same fill rule as the per-layer slot
+            resets).  Without this, a masked lane attends to its own
+            live cache (q=0 still averages the cached V rows),
+            re-acquiring nonzero activations that leak into the FAST
+            path's per-tensor activation exponents — the isolation
+            contract would then depend on the neighbor's magnitudes.
+            Fills are constants, so this holds no second pool alive."""
+            def walk(node):
+                out = {}
+                for k, v in node.items():
+                    if isinstance(v, dict):
+                        out[k] = walk(v)
+                    else:
+                        m = mask.reshape((1, -1) + (1,) * (v.ndim - 2))
+                        out[k] = jnp.where(m, v, jnp.asarray(-1 if k == "pos" else 0, v.dtype))
+                return out
+            return walk(caches)
+
+        # per-request prefill: retraces per prompt LENGTH (exact-length,
+        # no padding artifacts), never per level (traced switch index).
+        # No donation: the zero single-request cache template is
+        # allocated once and reused for every admission.
+        self._prefill = jax.jit(pre_disp)
+        self._single_template = init_caches(
+            cfg, 1, self.scfg.max_len, dtype=SERVE_CACHE_DTYPE
+        )
+
+        def pool_pass(level_idx, params, tok, pos, caches, mask, logits_acc):
+            """One decode pass of the whole pool at one level (the
+            mixed-batch path): non-member lanes are zeroed at the input
+            AND see a pristine cache view, so members compute exactly
+            as if the other levels' slots were empty; cache rows and
+            logits merge only where ``mask`` is set."""
+            view = mask_cache_view(caches, mask)
+            logits, new_caches = dec_disp(level_idx, params, tok, pos, view, mask)
+            caches = merge_caches(caches, new_caches, mask)
+            logits_acc = jnp.where(mask[:, None], logits, logits_acc)
+            return logits_acc, caches
+
+        # NB: logits_acc is NOT donated — the zero accumulator template
+        # is reused across steps and must stay valid.
+        self._pool_pass = jax.jit(pool_pass, donate_argnums=(4,))
+
+        def finish(logits, key):
+            """Sample + per-slot health: [token, finite, amplitude].
+            The (B, 3) view is pulled per step only in EOS mode; the
+            async mode leaves it on device and folds it into the
+            health accumulator."""
+            if temperature <= 0:
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                tok = jax.random.categorical(
+                    key, jnp.asarray(logits, jnp.float32) / temperature, axis=-1
+                ).astype(jnp.int32)
+            finite = jnp.all(jnp.isfinite(logits), axis=-1)
+            amp = jnp.max(jnp.abs(logits), axis=-1)
+            host_view = jnp.stack(
+                [tok.astype(jnp.float32), finite.astype(jnp.float32), amp], axis=1
+            )
+            return tok, host_view
+
+        self._finish = jax.jit(finish)
+
+        def step_update(gen_buf, gen_count, cur_tok, pos, health, tok, hv, active):
+            """Fold one decode step's results into the device state:
+            append active slots' tokens to their rings, advance their
+            counts/positions, accumulate health — all without a host
+            round-trip (inactive lanes write out-of-bounds -> dropped)."""
+            B, L = gen_buf.shape
+            idx = jnp.where(active, gen_count, L)
+            gen_buf = gen_buf.at[jnp.arange(B), idx].set(tok, mode="drop")
+            act = active.astype(jnp.int32)
+            gen_count = gen_count + act
+            cur_tok = jnp.where(active, tok, cur_tok)
+            pos = pos + act
+            health = jnp.where(
+                active[:, None],
+                jnp.stack(
+                    [jnp.minimum(health[:, 0], hv[:, 1]),
+                     jnp.maximum(health[:, 1], hv[:, 2])], axis=1,
+                ),
+                health,
+            )
+            return gen_buf, gen_count, cur_tok, pos, health
+
+        self._step_update = jax.jit(step_update, donate_argnums=(0, 1, 2, 3, 4))
+
+        def tick(level_idx, params, tok, pos, caches, mask, key,
+                 gen_buf, gen_count, health):
+            """Fused single-level decode step: pool pass + sampling +
+            ring/health update in ONE dispatch, composed from the same
+            ``finish``/``step_update``/``merge_caches`` bodies the
+            mixed-level path jits separately.  The hot path when all
+            active slots share a level (homogeneous traffic); its
+            masked lanes are only EMPTY slots, whose cache rows the
+            eviction reset already zeroed, so no pristine view is
+            needed here."""
+            logits, new_caches = dec_disp(level_idx, params, tok[:, None], pos, caches, mask)
+            caches = merge_caches(caches, new_caches, mask)
+            new_tok, hv = finish(logits, key)
+            gen_buf, gen_count, tok, pos, health = step_update(
+                gen_buf, gen_count, tok, pos, health, new_tok, hv, mask
+            )
+            return caches, gen_buf, gen_count, tok, pos, health, hv
+
+        self._tick = jax.jit(tick, donate_argnums=(2, 3, 4, 7, 8, 9))
+        self._write = jax.jit(write_cache_slot, donate_argnums=(0,))
+        self._reset = jax.jit(
+            lambda pool, slot: reset_cache_slot(pool, cfg, slot), donate_argnums=(0,)
+        )
+        self._zero_logits = jnp.zeros((self.scfg.n_slots, cfg.vocab), jnp.float32)
+        self._health_neutral = jnp.tile(
+            jnp.asarray([1.0, 0.0], jnp.float32), (self.scfg.n_slots, 1)
+        )
+
+    # -- admission / eviction ----------------------------------------------
+
+    def _level_idx(self, req: Request) -> int:
+        name = req.level or self.scfg.default_level
+        if name not in self.level_names:
+            raise ValueError(f"request {req.rid}: unknown level {name!r}")
+        return self.level_names.index(name)
+
+    def _admit(self, slot: int, req: Request) -> None:
+        """Prefill the request at its own level and scatter its caches
+        into the pool slot.  No host pull unless EOS checking needs the
+        first token's value."""
+        li = self._level_idx(req)
+        self.arbiter.reset_slot(slot, li)
+        plen = len(req.prompt)
+        logits, single = self._prefill(
+            jnp.int32(li), self.params, jnp.asarray([req.prompt], jnp.int32),
+            self._single_template,
+        )
+        self.stats["prefills"] += 1
+        self._key, sub = jax.random.split(self._key)
+        tok, hv = self._finish(logits, sub)
+        self.pool = self._write(self.pool, single, slot)
+        self._tok = self._tok.at[slot].set(tok[0])
+        self._pos = self._pos.at[slot].set(plen)
+        self._gen_buf = self._gen_buf.at[slot, 0].set(tok[0])
+        self._gen_count = self._gen_count.at[slot].set(1)
+        self._health = self._health.at[slot].set(
+            jnp.stack([hv[0, 1], hv[0, 2]])
+        )
+        eos_seen = False
+        if self.scfg.eos_id is not None:
+            eos_seen = int(np.asarray(hv)[0, 0]) == self.scfg.eos_id
+        reason = self.scheduler.advance(slot, eos=eos_seen)
+        if reason is not None:
+            self._finish_slot(slot, reason)
+
+    def _finish_slot(self, slot: int, reason: str) -> FinishedRequest:
+        """Pull the request's generated tokens (the one device->host
+        transfer a request ever costs in async mode), record it
+        finished, and reset the slot: zero cache rows (pos sentinel
+        back to -1) so no KV/SSM state leaks into the next occupant."""
+        n = self.scheduler.n_generated(slot)
+        toks = np.asarray(self._gen_buf[slot, :n]).tolist()
+        fin = self.scheduler.finish(slot, toks, reason)
+        self.pool = self._reset(self.pool, jnp.int32(slot))
+        self._tok = self._tok.at[slot].set(0)
+        self._pos = self._pos.at[slot].set(0)
+        self._gen_count = self._gen_count.at[slot].set(0)
+        return fin
+
+    # -- the serving loop ---------------------------------------------------
+
+    def serve(self, requests: Sequence[Request]) -> Dict[int, FinishedRequest]:
+        """Run all requests to completion; returns {rid: FinishedRequest}.
+
+        The loop structure is the continuous-batching engine: admission
+        (per-request prefill into freed slots) interleaves with pool
+        decode steps.  Host-sync policy: with ``eos_id`` set, one (B, 3)
+        pull per step (token values are needed to detect EOS — the
+        sanctioned per-token sync), and it carries the arbiter signals
+        for free.  Without ``eos_id``, eviction times are deterministic
+        from per-request budgets, so the loop dispatches fully async:
+        tokens accumulate in the device ring and are pulled ONCE per
+        request at eviction; health syncs every ``health_sync_every``
+        steps (the arbiter's hysteresis then operates on that cadence).
+        """
+        # atomic submission: validate the whole batch (including
+        # intra-batch rid collisions) before any request enters the
+        # queue, so a bad request cannot strand its predecessors
+        seen = set()
+        for r in requests:
+            self.scheduler.validate(r)
+            if r.rid in seen:
+                raise ValueError(f"duplicate request id {r.rid} within one serve() call")
+            seen.add(r.rid)
+        for r in requests:
+            self.scheduler.submit(r)
+
+        eos_mode = self.scfg.eos_id is not None
+        wanted = [r.rid for r in requests]
+        mask_key, mask_dev = None, None  # device occupancy mask, uploaded on membership change
+        while self.scheduler.has_work():
+            for slot, req in self.scheduler.admit():
+                self._admit(slot, req)
+
+            active = self.scheduler.active_mask()
+            if not active.any():
+                continue  # everything admitted finished at its first token
+
+            levels = self.arbiter.idx
+            present = sorted(set(int(v) for v in levels[active]))
+            self._key, sub = jax.random.split(self._key)
+            if len(present) == 1:
+                # hot path: homogeneous level -> ONE fused dispatch
+                key = (active.tobytes(), present[0])
+                if key != mask_key:
+                    mask_key, mask_dev = key, jnp.asarray(active)
+                (self.pool, self._gen_buf, self._gen_count, self._tok,
+                 self._pos, self._health, hv) = self._tick(
+                    jnp.int32(present[0]), self.params, self._tok, self._pos,
+                    self.pool, mask_dev, sub,
+                    self._gen_buf, self._gen_count, self._health,
+                )
+                self.stats["level_passes"] += 1
+            else:
+                # mixed levels: one pool pass per level, mask-merged
+                logits = self._zero_logits
+                for li in present:
+                    mask = jnp.asarray(active & (levels == li))
+                    logits, self.pool = self._pool_pass(
+                        jnp.int32(li), self.params, self._tok[:, None], self._pos,
+                        self.pool, mask, logits,
+                    )
+                    self.stats["level_passes"] += 1
+                tok, hv = self._finish(logits, sub)
+                active_dev = jnp.asarray(active)
+                (self._gen_buf, self._gen_count, self._tok, self._pos,
+                 self._health) = self._step_update(
+                    self._gen_buf, self._gen_count, self._tok, self._pos,
+                    self._health, tok, hv, active_dev,
+                )
+            self.stats["decode_steps"] += 1
+            self._step += 1
+
+            eos_flags = np.zeros((self.scfg.n_slots,), bool)
+            if eos_mode:
+                hv_host = np.asarray(hv)  # the per-step EOS pull
+                eos_flags = hv_host[:, 0].astype(np.int32) == self.scfg.eos_id
+                self.arbiter.observe(
+                    self._step, nonfinite=hv_host[:, 1] < 0.5,
+                    amplitude=hv_host[:, 2], active=active,
+                )
+            elif self._step % self.scfg.health_sync_every == 0:
+                h = np.asarray(self._health)  # periodic aggregated sync
+                self.arbiter.observe(
+                    self._step, nonfinite=h[:, 0] < 0.5, amplitude=h[:, 1],
+                    active=active,
+                )
+                self._health = self._health_neutral.copy()  # template stays valid under donation
+
+            for slot in np.nonzero(active)[0]:
+                reason = self.scheduler.advance(int(slot), eos=bool(eos_flags[slot]))
+                if reason is not None:
+                    self._finish_slot(int(slot), reason)
+
+        # hand results out AND release them from the scheduler: a
+        # server outlives its serve() calls, so retaining per-request
+        # state forever would leak memory proportional to lifetime
+        # traffic (a rid may be reused once its result is delivered).
+        return {rid: self.scheduler.pop_finished(rid) for rid in wanted}
+
+    def next_rid(self) -> int:
+        """Fresh request id (the server outlives any one ``serve`` call
+        — rids are unique for the server's lifetime)."""
+        rid = self._rid_counter
+        self._rid_counter += 1
+        return rid
+
+    def generate(self, prompts: List[List[int]], max_new: int = 32,
+                 level: Optional[str] = None) -> List[List[int]]:
+        """BatchedServer-compatible convenience: serve the prompts and
+        return token lists in input order."""
+        reqs = [
+            Request(rid=self.next_rid(), prompt=list(p), max_new=max_new, level=level)
+            for p in prompts
+        ]
+        fins = self.serve(reqs)
+        return [fins[r.rid].tokens for r in reqs]

@@ -136,7 +136,9 @@ def test_trainer_mode_switch_preserves_training(tmp_path):
 
 def test_serving_matches_teacher_forcing():
     """Greedy decode through the cache must equal argmax of the full
-    forward at each position (prefill/decode correctness)."""
+    forward at each position (prefill/decode correctness).  The
+    reference runs mode="exact" — the serving mode the server's f32
+    level maps to (SERVE_STEP_LEVELS)."""
     cfg = smoke("deepseek_7b")
     params = init_params(cfg, jax.random.PRNGKey(3))
     prompt = list(range(1, 9))
@@ -148,7 +150,7 @@ def test_serving_matches_teacher_forcing():
     seq = list(prompt)
     for _ in range(6):
         caches = init_caches(cfg, 1, 64)
-        logits, _ = jax.jit(lambda p, t, c: prefill_step(p, t, c, cfg))(
+        logits, _ = jax.jit(lambda p, t, c: prefill_step(p, t, c, cfg, mode="exact"))(
             params, jnp.asarray([seq], jnp.int32), caches
         )
         seq.append(int(jnp.argmax(logits[0])))
@@ -161,14 +163,12 @@ def test_serving_matches_teacher_forcing():
         "gemma2_2b",
         "mixtral_8x22b",
         "mamba2_1_3b",
-        pytest.param(
-            "jamba_v01_52b",
-            marks=pytest.mark.xfail(
-                reason="pre-existing: hybrid decode diverges from prefill re-derivation "
-                "on this toolchain — see ROADMAP 'Known-failing tier-1 tests'",
-                strict=False,
-            ),
-        ),
+        # jamba un-xfailed: the hybrid divergence was bf16 rounding of
+        # an O(1e3) residual stream amplifying shape-dependent gemm
+        # noise (one bf16 ulp = 8 at that magnitude); serving now runs
+        # the f32 "exact" mode + f32 caches, so decode agrees with
+        # prefill re-derivation across all families.
+        "jamba_v01_52b",
         "minicpm3_4b",
     ],
 )
@@ -184,7 +184,7 @@ def test_serving_decode_consistency_all_families(arch):
     seq = list(prompt)
     for _ in range(4):
         caches = init_caches(cfg, 1, 64)
-        logits, _ = jax.jit(lambda p, t, c: prefill_step(p, t, c, cfg))(
+        logits, _ = jax.jit(lambda p, t, c: prefill_step(p, t, c, cfg, mode="exact"))(
             params, jnp.asarray([seq], jnp.int32), caches
         )
         seq.append(int(jnp.argmax(logits[0])))
