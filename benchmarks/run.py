@@ -5,12 +5,14 @@ Run:  PYTHONPATH=src python -m benchmarks.run [--section trig|universal|mul|matm
 
 ``--json`` additionally records the perf trajectories: writes
 ``BENCH_fused_mlp.json`` (fused/unfused/precise medians at the
-configs/ MLP shapes + smoke-model decode tokens/s) AND
+configs/ MLP shapes + smoke-model decode tokens/s),
 ``BENCH_serving.json`` (static vs continuous-batching tokens/s on the
 mixed-length serving workload — gated in CI by
-benchmarks/check_serving_regression.py against the checked-in
-baseline) next to the CSV output, so successive PRs accumulate
-comparable numbers.
+benchmarks/check_serving_regression.py) AND
+``BENCH_speculative.json`` (ladder-speculative vs vanilla f32 greedy
+tokens/s — gated in CI by benchmarks/check_speculative_regression.py)
+next to the CSV output, so successive PRs accumulate comparable
+numbers.
 """
 
 import argparse
@@ -21,7 +23,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 sys.path.insert(0, str(Path(__file__).parent.parent))
 
-from benchmarks import bench_paper_tables, bench_serving, roofline  # noqa: E402
+from benchmarks import bench_paper_tables, bench_serving, bench_speculative, roofline  # noqa: E402
 
 
 def main() -> None:
@@ -45,6 +47,7 @@ def main() -> None:
         "ladder": bench_paper_tables.bench_ladder_switch,
         "fused_mlp": bench_paper_tables.bench_fused_mlp,
         "serving": bench_serving.bench_serving,
+        "speculative": bench_speculative.bench_speculative,
         "footprint": bench_paper_tables.bench_footprint,
         "deferred": bench_paper_tables.bench_deferred_error,
         "roofline": roofline.run,
@@ -59,13 +62,18 @@ def main() -> None:
         serving_path = Path(out_path).parent / "BENCH_serving.json"
         serving_path.write_text(json.dumps(serving_payload, indent=2) + "\n")
         print(f"wrote {serving_path}", file=sys.stderr)
+        spec_payload = bench_speculative.speculative_json()
+        spec_path = Path(out_path).parent / "BENCH_speculative.json"
+        spec_path.write_text(json.dumps(spec_payload, indent=2) + "\n")
+        print(f"wrote {spec_path}", file=sys.stderr)
         if args.section == "json-only":
             return
         # the JSON payloads already ran those suites — don't pay for
         # them twice in the same invocation
         sections.pop("fused_mlp", None)
         sections.pop("serving", None)
-        if args.section in ("fused_mlp", "serving"):
+        sections.pop("speculative", None)
+        if args.section in ("fused_mlp", "serving", "speculative"):
             return
 
     todo = sections.values() if args.section == "all" else [sections[args.section]]

@@ -195,6 +195,14 @@ class SlotArbiterConfig:
     amp_threshold: float = 1e4       # |logit| escalation threshold (Q16.16 headroom)
     stable_steps: int = 8            # healthy steps before stepping back down
     cooldown_steps: int = 4          # min steps between switches of one slot
+    #: speculative-decoding acceptance signal: a slot whose measured
+    #: draft acceptance rate stays below ``accept_threshold`` for
+    #: ``accept_patience`` consecutive measurements escalates its DRAFT
+    #: rung one step (cheap drafts that keep getting rejected cost more
+    #: than they save — a pure throughput signal; the f32 verify pass
+    #: keeps the output distribution fixed regardless).
+    accept_threshold: float = 0.5
+    accept_patience: int = 4
 
 
 class SlotArbiter:
@@ -214,6 +222,7 @@ class SlotArbiter:
         self.idx = np.full((n_slots,), config.start_idx, np.int32)
         self.floor = np.full((n_slots,), config.start_idx, np.int32)
         self._stable = np.zeros((n_slots,), np.int32)
+        self._low_accept = np.zeros((n_slots,), np.int32)
         self._last_switch = np.full((n_slots,), -(10**9), np.int64)
         #: recent (step, slot, old_idx, new_idx, reason) — bounded: a
         #: long-lived server must not grow state with lifetime traffic
@@ -229,12 +238,22 @@ class SlotArbiter:
         self.idx[slot] = idx
         self.floor[slot] = idx
         self._stable[slot] = 0
+        self._low_accept[slot] = 0
         self._last_switch[slot] = -(10**9)
 
-    def observe(self, step: int, nonfinite, amplitude, active=None) -> np.ndarray:
+    def observe(self, step: int, nonfinite, amplitude, active=None,
+                acceptance=None) -> np.ndarray:
         """Feed one step's (n_slots,) signals; returns the new per-slot
         level indices.  ``active`` masks out empty slots (their state is
-        frozen until the next admission)."""
+        frozen until the next admission).
+
+        ``acceptance`` (optional, (n_slots,) float): measured speculative
+        draft-acceptance rate in [0, 1]; NaN (or a negative value) marks
+        slots with no measurement this step — their low-acceptance
+        counter is left untouched.  Sustained low acceptance escalates
+        one rung; the NaN rescue always takes precedence (a non-finite
+        logit means the CURRENT rung's numerics are broken, which is a
+        correctness signal, not a throughput one)."""
         cfg = self.config
         nonfinite = np.asarray(nonfinite, bool)
         amplitude = np.asarray(amplitude, np.float32)
@@ -247,6 +266,13 @@ class SlotArbiter:
         self._stable = np.where(active & ~unhealthy, self._stable + 1, self._stable)
         self._stable[active & unhealthy] = 0
 
+        if acceptance is not None:
+            acceptance = np.asarray(acceptance, np.float32)
+            measured = active & np.isfinite(acceptance) & (acceptance >= 0.0)
+            low = measured & (acceptance < cfg.accept_threshold)
+            self._low_accept = np.where(low, self._low_accept + 1, self._low_accept)
+            self._low_accept[measured & ~low] = 0
+
         new_idx = self.idx.copy()
         # NaN rescue: straight to the top rung, no cooldown wait
         rescue = active & nonfinite & (self.idx < top)
@@ -254,8 +280,14 @@ class SlotArbiter:
         # amplitude escalation: one rung, cooldown honored
         esc = active & ~nonfinite & (amplitude > cfg.amp_threshold) & (self.idx < top) & cooled
         new_idx[esc] = self.idx[esc] + 1
+        # acceptance escalation: sustained low draft acceptance, one
+        # rung, cooldown honored; health signals take precedence
+        esc_acc = (active & ~unhealthy & (self._low_accept >= cfg.accept_patience)
+                   & (self.idx < top) & cooled)
+        new_idx[esc_acc] = self.idx[esc_acc] + 1
+        self._low_accept[esc_acc] = 0
         # demotion: stable long enough, cooldown honored, floor respected
-        dem = (active & ~unhealthy & (self.idx > self.floor)
+        dem = (active & ~unhealthy & ~esc_acc & (self.idx > self.floor)
                & (self._stable >= cfg.stable_steps) & cooled)
         new_idx[dem] = self.idx[dem] - 1
 
@@ -263,7 +295,10 @@ class SlotArbiter:
         self._last_switch[changed] = step
         self._stable[changed] = 0
         for s in np.nonzero(changed)[0]:
-            reason = "non-finite" if rescue[s] else ("amplitude" if esc[s] else "stable")
+            reason = ("non-finite" if rescue[s]
+                      else "amplitude" if esc[s]
+                      else "acceptance" if esc_acc[s]
+                      else "stable")
             self.switches.append((step, int(s), int(self.idx[s]), int(new_idx[s]), reason))
         self.idx = new_idx
         return self.idx

@@ -7,6 +7,10 @@ Smoke (CPU):
 ``--continuous`` runs the continuous-batching engine (slot-paged pool,
 per-request precision via ``--levels``) on a mixed-length/mixed-budget
 workload; the default runs the static lock-step ``BatchedServer``.
+``--continuous --speculative`` serves every request through
+ladder-speculative decoding (draft at ``--draft-level``, verify at f32
+— output identical to vanilla f32 greedy; watch ``spec_rounds`` /
+``spec_accepted`` in the printed stats).
 """
 
 from __future__ import annotations
@@ -29,6 +33,14 @@ def main():
     ap.add_argument("--levels", default=None,
                     help="comma list of per-request ladder levels for --continuous "
                          "(cycled over requests; e.g. 'q16_16,f32')")
+    ap.add_argument("--speculative", action="store_true",
+                    help="with --continuous: serve every request in "
+                         "ladder-speculative mode (draft at --draft-level, "
+                         "verify at f32 — output identical to vanilla f32)")
+    ap.add_argument("--draft-level", default="q16_16", choices=["q8_8", "q16_16"],
+                    help="draft rung for --speculative")
+    ap.add_argument("--spec-k", type=int, default=3,
+                    help="draft tokens per speculative round")
     args = ap.parse_args()
 
     from repro.configs import smoke
@@ -47,13 +59,23 @@ def main():
     prompts = [[1, 2, 3, 4, 5], [10, 11, 12], [7, 7, 7, 7], [3, 1, 4, 1, 5, 9]]
 
     if args.continuous:
+        from repro.runtime.speculative import SpeculativeConfig
+
+        spec = (
+            SpeculativeConfig(k=args.spec_k, draft_level=args.draft_level,
+                              max_len=128)
+            if args.speculative else None
+        )
         srv = ContinuousBatchingServer(
-            cfg, params, ContinuousServerConfig(n_slots=args.slots, max_len=128)
+            cfg, params,
+            ContinuousServerConfig(n_slots=args.slots, max_len=128,
+                                   speculative=spec),
         )
         levels = args.levels.split(",") if args.levels else [None]
         reqs = [
             Request(rid=srv.next_rid(), prompt=p, max_new=args.max_new + 4 * (i % 2),
-                    level=levels[i % len(levels)])
+                    level=levels[i % len(levels)],
+                    speculative=args.speculative)
             for i, p in enumerate(prompts)
         ]
         fins = srv.serve(reqs)

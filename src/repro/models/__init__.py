@@ -12,12 +12,15 @@ from repro.models.config import (
     smoke_config,
 )
 from repro.models.model import (
+    commit_segment,
     decode_step,
     init_caches,
     init_params,
     param_specs,
     prefill_step,
     reset_cache_slot,
+    segment_step,
     train_loss,
+    truncate_cache_slot,
     write_cache_slot,
 )

@@ -38,6 +38,7 @@ __all__ = [
     "init_mla_cache",
     "reset_attn_cache_slot",
     "reset_mla_cache_slot",
+    "truncate_attn_cache_slot",
 ]
 
 NEG_INF = -1e30
@@ -201,6 +202,41 @@ def decode_attention(q, k_cache, v_cache, kp, *, q_position, window=None, cap=No
     return out.reshape(B, 1, H, -1).astype(q.dtype)
 
 
+def decode_attention_multi(q, k_cache, v_cache, kp, *, q_positions, window=None,
+                           cap=None, k_exp=None, v_exp=None):
+    """Segment decode: S queries against a cache (the speculative-verify
+    / chunked-continuation path).  q (B,S,H,Dq) vs cache (B,L,KV,D);
+    kp (B,L) slot positions (-1 = unwritten); q_positions (B,S).
+
+    Each query position masks keys by its OWN position (kp <= qp_s), so
+    within-segment causality holds after the whole segment's k/v have
+    been written to the cache.  The (B,KV,G,S,L) score tensor is small
+    for decode-length segments (S = k+1 speculative drafts)."""
+    B, S, H, Dq = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(Dq)
+    qr = (q.astype(jnp.float32) * scale).reshape(B, S, KV, G, Dq)
+    s = jnp.einsum(
+        "bskgd,blkd->bkgsl", qr, k_cache.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    if k_exp is not None:  # (B, L, KV) -> (B, KV, 1, 1, L)
+        s = s * jnp.exp2(k_exp.astype(jnp.float32)).transpose(0, 2, 1)[:, :, None, None, :]
+    s = softcap(s, cap)
+    qp = q_positions[:, None, None, :, None]                   # (B,1,1,S,1)
+    kpb = kp[:, None, None, None, :]                           # (B,1,1,1,L)
+    valid = (kpb >= 0) & (kpb <= qp)
+    if window is not None:
+        valid &= kpb > qp - window
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if v_exp is not None:
+        p = p * jnp.exp2(v_exp.astype(jnp.float32)).transpose(0, 2, 1)[:, :, None, None, :]
+    out = jnp.einsum("bkgsl,blkd->bskgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, S, H, -1).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # GQA layer forward (train/prefill and decode)
 # ---------------------------------------------------------------------------
@@ -247,16 +283,46 @@ def reset_mla_cache_slot(cache: dict, slot) -> dict:
     return reset_attn_cache_slot(cache, slot)
 
 
-def _q8_exp(x, axes):
-    """per-slice pow2 exponent: smallest e with amax / 2**e <= 127."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axes)
-    e = jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30))).astype(jnp.int32) - 7
-    return jnp.where(amax > 0, e, 0)
+def truncate_attn_cache_slot(cache: dict, slot, keep_pos) -> dict:
+    """Truncate-to-position form of :func:`reset_attn_cache_slot`:
+    entries of ONE batch slot whose position is ``>= keep_pos`` go back
+    to the pristine fill (payloads zero, pos sentinel -1); entries below
+    the boundary are untouched BIT-FOR-BIT.  This is the speculative-
+    decoding rollback for position-indexed caches (GQA k/v and MLA
+    ckv/krope both carry the same per-slot ``pos`` tensor, so one
+    implementation serves both).  ``slot`` and ``keep_pos`` may be
+    traced — jit-safe.
+
+    NOTE: this restores a *pristine* fill, which equals the pre-write
+    contents only while the rolling buffer has not wrapped (position
+    ``>= keep_pos`` was never previously occupied by an OLDER live
+    entry).  Wrapped sliding-window rollback needs the before/after
+    merge in :func:`repro.models.model.commit_segment`, which keeps the
+    overwritten entries."""
+    out = {}
+    drop = cache["pos"][slot] >= keep_pos                      # (L,)
+    for k, v in cache.items():
+        row = v[slot]
+        fill = jnp.asarray(-1 if k == "pos" else 0, v.dtype)
+        mask = drop.reshape((-1,) + (1,) * (row.ndim - 1))
+        out[k] = v.at[slot].set(jnp.where(mask, fill, row))
+    return out
 
 
-def _q8_quant(x, e, trailing: int):
-    scale = jnp.exp2(-e.astype(jnp.float32)).reshape(e.shape + (1,) * trailing)
-    return jnp.clip(jnp.round(x.astype(jnp.float32) * scale), -128, 127).astype(jnp.int8)
+def _q8(x, axes):
+    """int8 KV-cache quantization on the paper's pow2 grid: one
+    exponent per kept slice — per (batch[, seq], kv-head), with the
+    reduced ``axes`` spanning head_dim.  Defers to the core
+    quantizer's kept-axes form so cache payloads and weight/activation
+    quantization share a single grid definition.  Returns
+    ``(int8 payload, exponents)`` with the exponents' reduced axes
+    squeezed away (the cache's ``k_exp``/``v_exp`` layout)."""
+    from repro.core.quantization import quantize_pow2
+
+    red = {a % x.ndim for a in axes}
+    keep = tuple(i for i in range(x.ndim) if i not in red)
+    qt = quantize_pow2(x, bits=8, axis=keep)
+    return qt.q, qt.exp.reshape([x.shape[i] for i in keep])
 
 
 def attention_forward(
@@ -302,15 +368,15 @@ def attention_forward(
         new_cache = None
         if prefill:
             new_cache = _prefill_cache(cache, k, v, positions, layer.window)
-    else:
+    elif S == 1:
         L = cache["k"].shape[1]
         slot = positions[:, 0] % L  # rolling for SWA; L==max_len handles full
         quantized = "k_exp" in cache
         if quantized:
-            e_k = _q8_exp(k[:, 0], axes=(2,))            # (B, KV)
-            e_v = _q8_exp(v[:, 0], axes=(2,))
-            k_cache = _store(cache["k"], _q8_quant(k[:, 0], e_k, 1), slot)
-            v_cache = _store(cache["v"], _q8_quant(v[:, 0], e_v, 1), slot)
+            qk, e_k = _q8(k[:, 0], axes=(2,))            # exps (B, KV)
+            qv, e_v = _q8(v[:, 0], axes=(2,))
+            k_cache = _store(cache["k"], qk, slot)
+            v_cache = _store(cache["v"], qv, slot)
             ek_c = _store(cache["k_exp"], e_k, slot)
             ev_c = _store(cache["v_exp"], e_v, slot)
         else:
@@ -325,6 +391,68 @@ def attention_forward(
             cap=cfg.attn_softcap,
             k_exp=ek_c, v_exp=ev_c,
         )
+        new_cache = {"k": k_cache, "v": v_cache, "pos": kp}
+        if quantized:
+            new_cache["k_exp"] = ek_c
+            new_cache["v_exp"] = ev_c
+    else:
+        # segment decode (speculative verify): S tokens against the
+        # cache with per-query causal masks.  Requires S <= L so the
+        # segment cannot overwrite its own earlier writes.
+        L = cache["k"].shape[1]
+        if S > L:
+            raise ValueError(f"segment length {S} exceeds cache length {L}")
+        quantized = "k_exp" in cache
+        k_cache, v_cache = cache["k"], cache["v"]
+        kp = cache["pos"]
+        ek_c = cache.get("k_exp")
+        ev_c = cache.get("v_exp")
+
+        def store_one(s_i):
+            nonlocal k_cache, v_cache, kp, ek_c, ev_c
+            slot = positions[:, s_i] % L
+            if quantized:
+                qk, e_k = _q8(k[:, s_i], axes=(2,))      # exps (B, KV)
+                qv, e_v = _q8(v[:, s_i], axes=(2,))
+                k_cache = _store(k_cache, qk, slot)
+                v_cache = _store(v_cache, qv, slot)
+                ek_c = _store(ek_c, e_k, slot)
+                ev_c = _store(ev_c, e_v, slot)
+            else:
+                k_cache = _store(k_cache, k[:, s_i], slot)
+                v_cache = _store(v_cache, v[:, s_i], slot)
+            kp = _store(kp, positions[:, s_i], slot)
+
+        if layer.window is None:
+            # full attention: positions stay below L, so no in-segment
+            # write can land on a slot an earlier query needs — write the
+            # whole segment, then batch the S queries (bit-matches the
+            # sequential decode order: same slots, same masked set).
+            for s_i in range(S):
+                store_one(s_i)
+            out = decode_attention_multi(
+                q, k_cache, v_cache, kp,
+                q_positions=positions,
+                window=None,
+                cap=cfg.attn_softcap,
+                k_exp=ek_c, v_exp=ev_c,
+            )
+        else:
+            # SWA rolling buffer: a later segment write can WRAP onto a
+            # slot an earlier query's window still covers.  Interleave
+            # store/query exactly as sequential decode does (S is static
+            # and small — at most k+1 speculative positions).
+            outs = []
+            for s_i in range(S):
+                store_one(s_i)
+                outs.append(decode_attention(
+                    q[:, s_i : s_i + 1], k_cache, v_cache, kp,
+                    q_position=positions[:, s_i],
+                    window=layer.window,
+                    cap=cfg.attn_softcap,
+                    k_exp=ek_c, v_exp=ev_c,
+                ))
+            out = jnp.concatenate(outs, axis=1)
         new_cache = {"k": k_cache, "v": v_cache, "pos": kp}
         if quantized:
             new_cache["k_exp"] = ek_c
@@ -346,10 +474,8 @@ def _prefill_cache(cache, k, v, positions, window):
     dt = cache["k"].dtype
     quantized = "k_exp" in cache
     if quantized:
-        e_k = _q8_exp(k, axes=(3,))                      # (B, S, KV)
-        e_v = _q8_exp(v, axes=(3,))
-        k = _q8_quant(k, e_k, 1)
-        v = _q8_quant(v, e_v, 1)
+        k, e_k = _q8(k, axes=(3,))                       # exps (B, S, KV)
+        v, e_v = _q8(v, axes=(3,))
 
     def place(buf, seg, fill_dtype):
         if window is None or L >= S:
@@ -436,7 +562,7 @@ def mla_forward(params, x, cfg: ModelConfig, *, positions, mode="precise", cache
                     cache["pos"], positions.astype(jnp.int32), 0, axis=1
                 ),
             }
-    else:
+    elif S == 1:
         # decode: absorbed form — score via latent space, cache stays rank-sized
         slot = positions[:, 0] % cache["ckv"].shape[1]
         ckv_c = _store(cache["ckv"], ckv[:, 0], slot)
@@ -455,6 +581,30 @@ def mla_forward(params, x, cfg: ModelConfig, *, positions, mode="precise", cache
         o_lat = jnp.einsum("bhl,blr->bhr", p, ckv_c.astype(jnp.float32))  # (B,H,rank)
         out = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv.astype(jnp.float32))
         out = out[:, None].astype(x.dtype)  # (B,1,H,vd)
+        new_cache = {"ckv": ckv_c, "krope": kr_c, "pos": kp}
+    else:
+        # segment decode: absorbed form with S queries, per-query masks
+        L = cache["ckv"].shape[1]
+        if S > L:
+            raise ValueError(f"segment length {S} exceeds cache length {L}")
+        ckv_c, kr_c, kp = cache["ckv"], cache["krope"], cache["pos"]
+        for s_i in range(S):
+            slot = positions[:, s_i] % L
+            ckv_c = _store(ckv_c, ckv[:, s_i], slot)
+            kr_c = _store(kr_c, k_rope[:, s_i], slot)
+            kp = _store(kp, positions[:, s_i], slot)
+        q_eff = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
+        s = jnp.einsum("bshr,blr->bshl", q_eff.astype(jnp.float32), ckv_c.astype(jnp.float32))
+        s = s + jnp.einsum(
+            "bshd,bld->bshl", q_rope.astype(jnp.float32), kr_c.astype(jnp.float32)
+        )
+        s = s / math.sqrt(nope + rope_d)
+        valid = (kp[:, None, None, :] >= 0) & (kp[:, None, None, :] <= positions[:, :, None, None])
+        s = jnp.where(valid, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bshl,blr->bshr", p, ckv_c.astype(jnp.float32))
+        out = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv.astype(jnp.float32))
+        out = out.astype(x.dtype)  # (B,S,H,vd)
         new_cache = {"ckv": ckv_c, "krope": kr_c, "pos": kp}
 
     out = pdot(out.reshape(B, S, H * vd), params["wo"], mode, wq=params.get("wo_q"))

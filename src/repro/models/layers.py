@@ -24,6 +24,9 @@ __all__ = [
     "psilu",
     "pdot",
     "dot_fast_int8",
+    "FAST_MODES",
+    "is_fast_mode",
+    "snap_q8_8",
     "rope_tables",
     "apply_rope",
     "swiglu_mlp",
@@ -80,6 +83,30 @@ def init_from_specs(specs, key):
 # ---------------------------------------------------------------------------
 # numerics
 # ---------------------------------------------------------------------------
+
+#: model-layer dispatch strings that run the Q-format integer path.
+#: "fast" is the paper's Q16.16 rung (W8A8 + CORDIC activations);
+#: "fast8" is the q8_8 draft rung used by ladder-speculative decoding —
+#: same int8 weight payloads, but activations are first rounded onto
+#: the Q8.8 grid, a genuinely coarser datapath (values below 2^-8 are
+#: lost, headroom saturates at +/-128).
+FAST_MODES = ("fast", "fast8")
+
+
+def is_fast_mode(mode: str) -> bool:
+    """True for any Q-format rung ("fast", "fast8")."""
+    return mode in FAST_MODES
+
+
+def snap_q8_8(x):
+    """Round onto the Q8.8 grid: 16-bit fixed point, 8 fractional bits,
+    saturating at +/-(2^7).  This is the activation coarsening of the
+    q8_8 draft rung — applied BEFORE the W8A8 int8 path, it emulates a
+    16-bit fixed-point datapath feeding the paper's deferred-correction
+    matmul."""
+    xf = x.astype(jnp.float32) * 256.0
+    xf = jnp.clip(jnp.round(xf), -32768.0, 32767.0)
+    return (xf * (1.0 / 256.0)).astype(x.dtype)
 
 
 def rms_norm(x, weight, eps: float = 1e-5):
@@ -143,14 +170,14 @@ _sigmoid_fast.defvjp(_sigmoid_fast_fwd, _sigmoid_fast_bwd)
 def ptanh(x, mode: str = "precise"):
     """𝒟[tanh]: FAST -> Q16.16 CORDIC (|eps| <= 6e-5, STE backward);
     PRECISE -> IEEE-754.  Inputs are expected in f32."""
-    if mode == "fast":
+    if is_fast_mode(mode):
         return _tanh_fast(x)
     return jnp.tanh(x)
 
 
 def psigmoid(x, mode: str = "precise"):
     """𝒟[sigmoid]: FAST -> Q16.16 CORDIC (|eps| <= 5e-5, STE backward)."""
-    if mode == "fast":
+    if is_fast_mode(mode):
         return _sigmoid_fast(x)
     return jax.nn.sigmoid(x)
 
@@ -158,7 +185,7 @@ def psigmoid(x, mode: str = "precise"):
 def psilu(x, mode: str = "precise"):
     """𝒟[silu]: x * sigmoid(x) with the sigmoid precision-dispatched;
     the product rule composes with the sigmoid STE under autodiff."""
-    if mode == "fast":
+    if is_fast_mode(mode):
         return x * _sigmoid_fast(x)
     return jax.nn.silu(x)
 
@@ -316,7 +343,9 @@ def pdot(x, w, mode: str = "precise", wq=None):
 
     ``wq``: optional cached int8 weights — used by the FAST path only.
     """
-    if mode == "fast":
+    if is_fast_mode(mode):
+        if mode == "fast8":
+            x = snap_q8_8(x)
         return dot_fast_int8(x, w, wq=wq).astype(jnp.bfloat16)
     dt = jnp.float32 if mode == "exact" else jnp.bfloat16
     return jax.lax.dot_general(
@@ -341,7 +370,7 @@ def rope_tables(positions, rope_dim: int, base: float = 10000.0, mode: str = "pr
     path at long-context positions (tests/test_cordic.py).
     """
     half = rope_dim // 2
-    if mode == "fast":
+    if is_fast_mode(mode):
         from repro.core.cordic import exact_rope_phase_q16, cordic_sincos_q16, rope_inv_freq_q64
         from repro.core.qformat import Q16_16, from_fixed
 
@@ -414,7 +443,9 @@ def swiglu_mlp(params, x, mode: str = "precise", eps: float = 1e-5):
     the original three-dispatch path (the training/default route).
     """
     h = rms_norm(x, params["norm"], eps)
-    if mode == "fast" and "w_gate_q" in params:
+    if is_fast_mode(mode) and "w_gate_q" in params:
+        if mode == "fast8":
+            h = snap_q8_8(h)
         act = _fused_swiglu_fast(h, params["w_gate_q"], params["w_up_q"])
         act = act.astype(jnp.bfloat16)
         return pdot(act, params["w_down"], mode, wq=params["w_down_q"])

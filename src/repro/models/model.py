@@ -34,8 +34,11 @@ __all__ = [
     "train_loss",
     "prefill_step",
     "decode_step",
+    "segment_step",
+    "commit_segment",
     "reset_cache_slot",
     "write_cache_slot",
+    "truncate_cache_slot",
 ]
 
 Constrain = Callable[[jnp.ndarray, str], jnp.ndarray]
@@ -107,6 +110,40 @@ def reset_cache_slot(caches, cfg: ModelConfig, slot):
     for i, spec in enumerate(cfg.period):
         fn = reset_fn[spec.kind]
         out[f"pos{i}"] = jax.vmap(lambda c, fn=fn: fn(c, slot))(caches[f"pos{i}"])
+    return out
+
+
+def truncate_cache_slot(pool, cfg: ModelConfig, slot, keep_pos, ssm_snapshot=None):
+    """Truncate-to-position form of :func:`reset_cache_slot`: roll ONE
+    batch slot of a stacked cache pool back so only entries at positions
+    ``< keep_pos`` survive.  Position-indexed caches (attn/mla) drop the
+    rejected entries in place; SSM caches are cumulative, so their
+    rollback needs ``ssm_snapshot`` — a mapping ``pos{i} ->
+    {"state", "conv"}`` with leaves ``(n_periods, ...)`` holding the
+    slot's cache contents as of ``keep_pos`` (e.g. the per-position
+    states from :func:`segment_step`'s ``seg_aux``).  Raises if the
+    model has SSM layers and no snapshot is given.  ``slot`` and
+    ``keep_pos`` may be traced — jit-safe."""
+    from repro.models import attention as attn
+
+    out = {}
+    for i, spec in enumerate(cfg.period):
+        key = f"pos{i}"
+        if spec.kind in ("attn", "mla"):
+            out[key] = jax.vmap(
+                lambda c: attn.truncate_attn_cache_slot(c, slot, keep_pos)
+            )(pool[key])
+        else:
+            if ssm_snapshot is None or key not in ssm_snapshot:
+                raise ValueError(
+                    "truncate_cache_slot: SSM caches are cumulative and "
+                    f"need an ssm_snapshot entry for {key}"
+                )
+            snap = ssm_snapshot[key]
+            out[key] = {
+                k: pool[key][k].at[:, slot].set(snap[k].astype(pool[key][k].dtype))
+                for k in pool[key]
+            }
     return out
 
 
@@ -240,7 +277,8 @@ def train_loss(
 # ---------------------------------------------------------------------------
 
 
-def _scan_with_caches(params, x, caches, cfg, positions, mode, constrain, *, prefill):
+def _scan_with_caches(params, x, caches, cfg, positions, mode, constrain, *,
+                      prefill, collect_aux: bool = False):
     """Scan periods with the stacked cache in the CARRY, updated in
     place via dynamic_update_index — ONE cache buffer end to end.
 
@@ -248,6 +286,10 @@ def _scan_with_caches(params, x, caches, cfg, positions, mode, constrain, *, pre
     output is distinct from the xs input, costing a full extra cache
     per device — fatal for 32k decode cells.  Measured in EXPERIMENTS.md
     §Perf iteration P2.)
+
+    ``collect_aux=True`` (segment decode): each period's segment
+    rollback state rides out as scan ys, stacked to leaves of shape
+    ``(n_periods, ...)`` — a third return value.
     """
 
     def body(carry, xs):
@@ -256,21 +298,24 @@ def _scan_with_caches(params, x, caches, cfg, positions, mode, constrain, *, pre
         cache_i = jax.tree.map(
             lambda c: jax.lax.dynamic_index_in_dim(c, i, 0, keepdims=False), all_caches
         )
+        seg_aux = {} if collect_aux else None
         h2, new_cache, _ = period_forward(
             period_params, h, cfg,
             positions=positions, mode=mode, caches=cache_i, prefill=prefill,
-            constrain=constrain,
+            constrain=constrain, seg_aux=seg_aux,
         )
         all_caches = jax.tree.map(
             lambda c, n: jax.lax.dynamic_update_index_in_dim(c, n.astype(c.dtype), i, 0),
             all_caches, new_cache,
         )
-        return (h2, all_caches), None
+        return (h2, all_caches), seg_aux
 
-    (x, new_caches), _ = jax.lax.scan(
+    (x, new_caches), aux = jax.lax.scan(
         body, (x, caches),
         (params["periods"], jnp.arange(cfg.n_periods, dtype=jnp.int32)),
     )
+    if collect_aux:
+        return x, new_caches, aux
     return x, new_caches
 
 
@@ -345,3 +390,97 @@ def decode_step(
         preferred_element_type=jnp.float32,
     )
     return softcap(logits, cfg.final_softcap, mode), new_caches
+
+
+def segment_step(
+    params,
+    tokens,
+    positions,
+    caches,
+    cfg: ModelConfig,
+    mode: str = "exact",
+    constrain: Constrain = _id,
+    lane_mask=None,
+):
+    """Mid-sequence segment forward: ``tokens`` (B,S) at explicit
+    ``positions`` (B,S) against populated caches — the speculative-
+    verify pass.  Returns ``(logits (B,S,V), caches', seg_aux)``.
+
+    All S positions are scored in ONE pass (this is where speculative
+    decoding's verification throughput comes from); the caches come
+    back with the whole segment committed, and ``seg_aux`` holds the
+    per-position SSM rollback candidates for
+    :func:`commit_segment` to roll rejected suffixes back.
+
+    mode="exact": the f32 serving-consistency path — required for the
+    token-exactness contract (verification logits must match what
+    vanilla f32 decode would have produced).
+    """
+    B, S = tokens.shape
+    x = _embed(params, tokens, cfg)
+    if mode == "exact":
+        x = x.astype(jnp.float32)
+    if lane_mask is not None:
+        x = x * lane_mask.astype(x.dtype)[:, None, None]
+    x, new_caches, seg_aux = _scan_with_caches(
+        params, x, caches, cfg, positions.astype(jnp.int32), mode, constrain,
+        prefill=False, collect_aux=True,
+    )
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head_dt = jnp.float32 if mode == "exact" else jnp.bfloat16
+    logits = jnp.einsum(
+        "bsd,dv->bsv",
+        x.astype(head_dt),
+        _lm_head(params, cfg).astype(head_dt),
+        preferred_element_type=jnp.float32,
+    )
+    return softcap(logits, cfg.final_softcap, mode), new_caches, seg_aux
+
+
+def commit_segment(before, after, seg_aux, cfg: ModelConfig, *,
+                   keep_pos, keep_count, active):
+    """Merge a verified segment into the cache pool, rolling REJECTED
+    positions back bit-for-bit.
+
+    ``before``/``after``: the stacked cache pool as of before/after
+    :func:`segment_step` (leaves ``(n_periods, B, ...)``).
+    ``seg_aux``: the third return of :func:`segment_step`.
+    ``keep_pos`` (B,): last accepted position — cache entries at
+    positions ``> keep_pos`` revert to their pre-segment contents
+    (which correctly restores even wrapped sliding-window slots the
+    segment overwrote).  ``keep_count`` (B,): number of accepted
+    segment positions (>= 1 for active lanes).  ``active`` (B,) bool:
+    lanes not in the segment keep their ``before`` caches untouched.
+    """
+    out = {}
+    for i, spec in enumerate(cfg.period):
+        key = f"pos{i}"
+        b, a = before[key], after[key]
+        if spec.kind in ("attn", "mla"):
+            rejected = (a["pos"] > keep_pos[None, :, None]) | (~active[None, :, None])
+            merged = {}
+            for name, av in a.items():
+                mask = rejected.reshape(rejected.shape + (1,) * (av.ndim - 3))
+                merged[name] = jnp.where(mask, b[name], av)
+            out[key] = merged
+        else:  # mamba: cumulative state — select the per-position candidates
+            states = seg_aux[key]["states"]          # (P,B,S,nh,ds,hd) f32
+            conv_hist = seg_aux[key]["conv_hist"]    # (P,B,K-1+S,C)
+            S = states.shape[2]
+            Km1 = conv_hist.shape[2] - S
+            idx = jnp.clip(keep_count - 1, 0, S - 1).astype(jnp.int32)
+            sel = jnp.take_along_axis(
+                states, idx.reshape(1, -1, 1, 1, 1, 1), axis=2
+            )[:, :, 0]
+            rows = (
+                jnp.clip(keep_count, 0, S).astype(jnp.int32).reshape(1, -1, 1, 1)
+                + jnp.arange(Km1, dtype=jnp.int32).reshape(1, 1, -1, 1)
+            )
+            conv = jnp.take_along_axis(conv_hist, jnp.broadcast_to(
+                rows, conv_hist.shape[:2] + (Km1, conv_hist.shape[3])), axis=2)
+            am = active.reshape(1, -1, 1, 1, 1)
+            out[key] = {
+                "state": jnp.where(am, sel.astype(b["state"].dtype), b["state"]),
+                "conv": jnp.where(am[..., 0], conv.astype(b["conv"].dtype), b["conv"]),
+            }
+    return out

@@ -31,7 +31,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models.layers import Spec, attn_norm_spec, pdot, psilu, rms_norm
+from repro.models.layers import (
+    Spec,
+    attn_norm_spec,
+    is_fast_mode,
+    pdot,
+    psilu,
+    rms_norm,
+    snap_q8_8,
+)
 
 __all__ = ["moe_specs", "moe_forward"]
 
@@ -153,7 +161,9 @@ def moe_forward(
     # round-trip re-quantizes prefill-vs-decode noise to bf16 ulps,
     # which top-k routing then amplifies into discrete flips.
     dt = jnp.float32 if mode == "exact" else jnp.bfloat16
-    if mode == "fast" and "w_gate_q" in params:
+    if is_fast_mode(mode) and "w_gate_q" in params:
+        if mode == "fast8":
+            xe = snap_q8_8(xe)
         ye = constrain(_fused_expert_mlp(params, xe).astype(dt), "moe4d")
     else:
         gate = jnp.einsum("becd,edf->becf", xe.astype(dt), params["w_gate"].astype(dt))

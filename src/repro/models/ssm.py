@@ -87,7 +87,7 @@ def _causal_depthwise_conv(x, w, b, carry: Optional[jnp.ndarray] = None):
     return out + b[None, None, :], new_carry
 
 
-def _ssd_chunked(x, dt, A, B_, C_, chunk: int):
+def _ssd_chunked(x, dt, A, B_, C_, chunk: int, initial_state=None):
     """SSD dual form.
 
     x:  (B, S, nh, hd)   inputs per head
@@ -95,7 +95,10 @@ def _ssd_chunked(x, dt, A, B_, C_, chunk: int):
     A:  (nh,)            negative decay rates
     B_: (B, S, ds)       input projections (n_groups=1, broadcast to heads)
     C_: (B, S, ds)       output projections
-    Returns y: (B, S, nh, hd).
+    initial_state: optional (B, nh, ds, hd) carried-in state (mid-sequence
+    continuation: speculative verify segments, chunked prefill) — zeros
+    when omitted (training / prefill from position 0).
+    Returns (y: (B, S, nh, hd), final_state).
     """
     Bb, S, nh, hd = x.shape
     ds = B_.shape[-1]
@@ -139,12 +142,43 @@ def _ssd_chunked(x, dt, A, B_, C_, chunk: int):
         state = state * jnp.exp(total)[:, :, None, None] + inj
         return state, y_intra + y_inter
 
-    state0 = jnp.zeros((Bb, nh, ds, hd), jnp.float32)
+    if initial_state is None:
+        state0 = jnp.zeros((Bb, nh, ds, hd), jnp.float32)
+    else:
+        state0 = initial_state.astype(jnp.float32)
     # keep the scanned views in their storage dtype; each step upcasts
     # its own chunk (full-sequence f32 copies were 2x the buffer cost)
     final_state, yc = jax.lax.scan(step, state0, (xc, dtc, Bc, Cc))
     y = yc.swapaxes(0, 1).reshape(Bb, nc * chunk, nh, hd)
     return y[:, :S], final_state
+
+
+def _ssd_segment(xs, dt, A, Bp, Cp, state0):
+    """Sequential recurrence over a short decode segment, emitting the
+    state AFTER EVERY position (the rollback candidates for speculative
+    verification).  Each scan step performs exactly the einsums of the
+    single-token decode branch, so the per-position states match what a
+    sequence of single-token decodes would have produced from the same
+    layer inputs.
+
+    xs (B,S,nh,hd), dt (B,S,nh), Bp/Cp (B,S,ds), state0 (B,nh,ds,hd)
+    -> (y (B,S,nh,hd) f32, states (B,S,nh,ds,hd) f32)
+    """
+
+    def step(state, blk):
+        xb, dtb, Bb_, Cb = blk
+        dA = jnp.exp(dtb * A[None, :])                               # (B,nh)
+        inj = jnp.einsum("bd,bhp,bh->bhdp", Bb_, xb, dtb)
+        state = state * dA[:, :, None, None] + inj
+        y = jnp.einsum("bd,bhdp->bhp", Cb, state)
+        return state, (y, state)
+
+    _, (ys, states) = jax.lax.scan(
+        step,
+        state0,
+        (xs.swapaxes(0, 1), dt.swapaxes(0, 1), Bp.swapaxes(0, 1), Cp.swapaxes(0, 1)),
+    )
+    return ys.swapaxes(0, 1), states.swapaxes(0, 1)
 
 
 def ssm_forward(
@@ -156,9 +190,16 @@ def ssm_forward(
     cache: Optional[dict] = None,
     prefill: bool = False,
     constrain=lambda x, kind: x,
+    seg_aux: Optional[dict] = None,
 ) -> Tuple[jnp.ndarray, Optional[dict]]:
     """x: (B, S, d). cache given + prefill -> populate state from the
-    segment; cache given, S==1 -> single-step recurrence decode."""
+    segment; cache given, S==1 -> single-step recurrence decode;
+    cache given, S>1, not prefill -> mid-sequence SEGMENT decode (the
+    speculative-verify / chunked-continuation path): the recurrence
+    continues from the cached state, and — because the SSM state is
+    cumulative rather than position-indexed — ``seg_aux`` (a dict the
+    caller owns) receives the per-position rollback candidates:
+    ``states`` (B,S,nh,ds,hd) and ``conv_hist`` (B,K-1+S,conv_dim)."""
     B, S, d = x.shape
     s = cfg.ssm
     d_in = s.d_inner(d)
@@ -198,13 +239,31 @@ def ssm_forward(
                 "state": final_state.astype(cache["state"].dtype),
                 "conv": new_conv.astype(cache["conv"].dtype),
             }
-    else:
+    elif S == 1:
         state = cache["state"]
         dA = jnp.exp(dt[:, 0, :] * A[None, :])                       # (B,nh)
         inj = jnp.einsum("bd,bhp,bh->bhdp", Bp[:, 0], xs[:, 0], dt[:, 0])
         state = state * dA[:, :, None, None] + inj
         y = jnp.einsum("bd,bhdp->bhp", Cp[:, 0], state)[:, None]     # (B,1,nh,hd)
         new_cache = {"state": state, "conv": new_conv}
+    else:
+        # mid-sequence segment decode (speculative verify): sequential
+        # recurrence from the cached state, per-position states kept
+        # as rollback candidates
+        y, states = _ssd_segment(
+            xs.astype(jnp.float32), dt, A,
+            Bp.astype(jnp.float32), Cp.astype(jnp.float32),
+            cache["state"].astype(jnp.float32),
+        )
+        if seg_aux is not None:
+            seg_aux["states"] = states
+            # the conv input window history: carry ++ this segment's
+            # conv inputs — the carry after accepting ``a`` tokens is
+            # rows [a : a+K-1]
+            seg_aux["conv_hist"] = jnp.concatenate(
+                [cache["conv"].astype(conv_in.dtype), conv_in], axis=1
+            )
+        new_cache = {"state": states[:, -1], "conv": new_conv}
 
     y = y + xs.astype(jnp.float32) * params["D"][None, None, :, None]
     y = y.reshape(B, S, d_in)

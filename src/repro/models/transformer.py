@@ -84,8 +84,14 @@ def period_forward(
     caches: Optional[dict] = None,
     prefill: bool = False,
     constrain: Constrain = _id_constrain,
+    seg_aux: Optional[dict] = None,
 ) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
-    """Apply one period. Returns (x, new_caches, aux_losses (2,))."""
+    """Apply one period. Returns (x, new_caches, aux_losses (2,)).
+
+    ``seg_aux``: mutable dict for segment-decode rollback state.  When
+    given (speculative verify), each SSM layer records its per-position
+    states under ``seg_aux[f"pos{i}"]`` so the caller can roll the
+    cumulative cache back to any position in the segment."""
     aux = jnp.zeros((2,), jnp.float32)
     new_caches = {} if caches is not None else None
 
@@ -106,10 +112,13 @@ def period_forward(
                 constrain=constrain,
             )
         else:  # mamba
+            layer_aux = {} if seg_aux is not None else None
             h, c = ssm_mod.ssm_forward(
                 p["mixer"], x, cfg, mode=mode, cache=cache_i, prefill=prefill,
-                constrain=constrain,
+                constrain=constrain, seg_aux=layer_aux,
             )
+            if seg_aux is not None:
+                seg_aux[f"pos{i}"] = layer_aux
         x = constrain(x + h, "residual")
 
         if "ffn" in p:

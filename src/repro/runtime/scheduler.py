@@ -49,12 +49,19 @@ class Request:
     ``level``: ladder level name this request runs at (``None`` =
     server default).  The request's precision may be *escalated* above
     this at runtime by the per-slot arbiter, never demoted below it.
+
+    ``speculative``: serve this request through ladder-speculative
+    decoding (draft at a cheap rung, verify at f32 — see
+    :mod:`repro.runtime.speculative`).  Output is identical to vanilla
+    f32 greedy decode; only throughput changes.  Requires the server to
+    be built with a ``speculative`` config.
     """
 
     rid: int
     prompt: List[int]
     max_new: int = 32
     level: Optional[str] = None
+    speculative: bool = False
 
     def __post_init__(self):
         if not self.prompt:
@@ -171,6 +178,13 @@ class ContinuousScheduler:
         e = self.slots[slot]
         assert e is not None, f"slot {slot} is empty"
         return e.n_generated
+
+    def position(self, slot: int) -> int:
+        """Next decode position of the slot's request (prompt length +
+        generated so far) — the server's speculative-headroom check."""
+        e = self.slots[slot]
+        assert e is not None, f"slot {slot} is empty"
+        return e.pos
 
     def advance(self, slot: int, eos: bool = False) -> Optional[str]:
         """Count one generated token for the slot's request (the first

@@ -80,6 +80,11 @@ from repro.models import (
 from repro.models.config import ModelConfig
 from repro.models.layers import attach_quantized_weights
 from repro.runtime.scheduler import ContinuousScheduler, FinishedRequest, Request
+from repro.runtime.speculative import (
+    SPEC_DRAFT_LEVELS,
+    SpeculativeConfig,
+    register_spec_steps,
+)
 
 __all__ = [
     "ServerConfig",
@@ -244,6 +249,10 @@ class ContinuousServerConfig:
     arbiter: SlotArbiterConfig = dataclasses.field(
         default_factory=lambda: SlotArbiterConfig(n_levels=len(SERVE_STEP_LEVELS))
     )
+    #: enable ladder-speculative decoding for requests that ask for it
+    #: (``Request.speculative``).  ``None`` disables (such requests are
+    #: rejected at submission).  See repro.runtime.speculative.
+    speculative: Optional[SpeculativeConfig] = None
 
 
 class ContinuousBatchingServer:
@@ -307,10 +316,27 @@ class ContinuousBatchingServer:
             scfg.n_slots, scfg.max_len, scfg.eos_id, levels=self.level_names
         )
         self.arbiter = SlotArbiter(scfg.n_slots, scfg.arbiter)
+        # speculative mode: a SEPARATE per-slot arbiter whose rungs index
+        # the DRAFT ladder (SPEC_DRAFT_LEVELS) — acceptance-rate driven,
+        # while self.arbiter keeps governing vanilla slots' serve levels.
+        self.draft_arbiter: Optional[SlotArbiter] = None
+        if scfg.speculative is not None:
+            draft_names = tuple(lv for lv, _ in SPEC_DRAFT_LEVELS)
+            self.draft_arbiter = SlotArbiter(
+                scfg.n_slots,
+                dataclasses.replace(
+                    scfg.arbiter,
+                    n_levels=len(draft_names),
+                    start_idx=draft_names.index(scfg.speculative.draft_level),
+                ),
+            )
         self._key = jax.random.PRNGKey(scfg.seed)
         self._step = 0
         self._rid_counter = 0
-        self.stats = {"decode_steps": 0, "level_passes": 0, "prefills": 0}
+        self.stats = {
+            "decode_steps": 0, "level_passes": 0, "prefills": 0,
+            "spec_rounds": 0, "spec_drafted": 0, "spec_accepted": 0,
+        }
         self._build()
 
     # -- jitted step functions ---------------------------------------------
@@ -459,6 +485,28 @@ class ContinuousBatchingServer:
             return caches, gen_buf, gen_count, tok, pos, health, hv
 
         self._tick = jax.jit(tick, donate_argnums=(2, 3, 4, 7, 8, 9))
+
+        # speculative per-slot mode: draft dispatch (traced rung index)
+        # + fused f32 verify/commit, plus a ring update that appends a
+        # VARIABLE number of committed tokens per slot in one dispatch.
+        self._spec_draft = self._spec_verify = None
+        if self.scfg.speculative is not None:
+            k = self.scfg.speculative.k
+            self._spec_draft, self._spec_verify, self._draft_levels = (
+                register_spec_steps(self.engine, cfg, k)
+            )
+
+            def spec_update(gen_buf, gen_count, preds, n_commit, mask):
+                B, L = gen_buf.shape
+                rows = jnp.arange(B)
+                for j in range(k + 1):  # static unroll: k+1 masked appends
+                    w = mask & (j < n_commit)
+                    idx = jnp.where(w, gen_count + j, L)
+                    gen_buf = gen_buf.at[rows, idx].set(preds[:, j], mode="drop")
+                return gen_buf, gen_count + n_commit
+
+            self._spec_update = jax.jit(spec_update, donate_argnums=(0, 1))
+
         self._write = jax.jit(write_cache_slot, donate_argnums=(0,))
         self._reset = jax.jit(
             lambda pool, slot: reset_cache_slot(pool, cfg, slot), donate_argnums=(0,)
@@ -480,7 +528,14 @@ class ContinuousBatchingServer:
         """Prefill the request at its own level and scatter its caches
         into the pool slot.  No host pull unless EOS checking needs the
         first token's value."""
-        li = self._level_idx(req)
+        if req.speculative:
+            # the exactness anchor: a speculative request's prefill and
+            # (verify) decode both run the f32/"exact" rung; the
+            # request-level rung choice moves to the DRAFT arbiter.
+            li = self.level_names.index("f32")
+            self.draft_arbiter.reset_slot(slot)
+        else:
+            li = self._level_idx(req)
         self.arbiter.reset_slot(slot, li)
         plen = len(req.prompt)
         logits, single = self._prefill(
@@ -519,6 +574,56 @@ class ContinuousBatchingServer:
         self._gen_count = self._gen_count.at[slot].set(0)
         return fin
 
+    # -- speculative round --------------------------------------------------
+
+    def _spec_round(self, spec_now: np.ndarray, k: int) -> None:
+        """One draft/verify round for the speculative lanes: draft k
+        tokens per lane at each lane's DRAFT rung (grouped passes over
+        the draft ladder, mask-merged like the vanilla multi-level
+        path), verify all k+1 positions in one f32 segment pass that
+        also commits/rolls back the pool in-dispatch, append the
+        committed tokens to the device ring, and feed the measured
+        acceptance rate to the draft arbiter.  The per-round host sync
+        is (B, k+2) ints — commit counts + committed token values (the
+        EOS/bookkeeping pull, the speculative analogue of the vanilla
+        per-step (B, 3) pull)."""
+        rungs = self.draft_arbiter.idx
+        present = sorted(set(int(v) for v in rungs[spec_now]))
+        drafts = None
+        for ri in present:
+            dmask = jnp.asarray(spec_now & (rungs == ri))
+            part = self._spec_draft(
+                jnp.int32(ri), self.params, self._tok, self._pos, self.pool, dmask
+            )
+            drafts = part if drafts is None else jnp.where(dmask[:, None], part, drafts)
+        mask_dev = jnp.asarray(spec_now)
+        (preds, n_commit, self.pool, self._tok, self._pos,
+         finite, amp) = self._spec_verify(
+            self.params, self._tok, self._pos, drafts, self.pool, mask_dev
+        )
+        self._gen_buf, self._gen_count = self._spec_update(
+            self._gen_buf, self._gen_count, preds, n_commit, mask_dev
+        )
+        n_h = np.asarray(n_commit)
+        preds_h = np.asarray(preds)
+        accepted = np.maximum(n_h - 1, 0)
+        acc = np.where(spec_now, accepted / k, np.nan)
+        self.draft_arbiter.observe(
+            self._step, nonfinite=~np.asarray(finite), amplitude=np.asarray(amp),
+            active=spec_now, acceptance=acc,
+        )
+        self.stats["spec_rounds"] += 1
+        self.stats["spec_drafted"] += int(k * spec_now.sum())
+        self.stats["spec_accepted"] += int(accepted[spec_now].sum())
+        eos_id = self.scfg.eos_id
+        for slot in np.nonzero(spec_now)[0]:
+            for j in range(int(n_h[slot])):
+                eos = eos_id is not None and int(preds_h[slot, j]) == eos_id
+                reason = self.scheduler.advance(int(slot), eos=eos)
+                if reason is not None:
+                    self._finish_slot(int(slot), reason)
+                    break
+
     # -- the serving loop ---------------------------------------------------
 
     def serve(self, requests: Sequence[Request]) -> Dict[int, FinishedRequest]:
@@ -541,6 +646,11 @@ class ContinuousBatchingServer:
         seen = set()
         for r in requests:
             self.scheduler.validate(r)
+            if r.speculative and self._spec_verify is None:
+                raise ValueError(
+                    f"request {r.rid}: speculative=True but the server was "
+                    "built without a speculative config"
+                )
             if r.rid in seen:
                 raise ValueError(f"duplicate request id {r.rid} within one serve() call")
             seen.add(r.rid)
@@ -549,6 +659,7 @@ class ContinuousBatchingServer:
 
         eos_mode = self.scfg.eos_id is not None
         wanted = [r.rid for r in requests]
+        k = self.scfg.speculative.k if self.scfg.speculative is not None else 0
         mask_key, mask_dev = None, None  # device occupancy mask, uploaded on membership change
         while self.scheduler.has_work():
             for slot, req in self.scheduler.admit():
@@ -558,61 +669,77 @@ class ContinuousBatchingServer:
             if not active.any():
                 continue  # everything admitted finished at its first token
 
-            levels = self.arbiter.idx
-            present = sorted(set(int(v) for v in levels[active]))
-            self._key, sub = jax.random.split(self._key)
-            if len(present) == 1:
-                # hot path: homogeneous level -> ONE fused dispatch
-                key = (active.tobytes(), present[0])
-                if key != mask_key:
-                    mask_key, mask_dev = key, jnp.asarray(active)
-                (self.pool, self._gen_buf, self._gen_count, self._tok,
-                 self._pos, self._health, hv) = self._tick(
-                    jnp.int32(present[0]), self.params, self._tok, self._pos,
-                    self.pool, mask_dev, sub,
-                    self._gen_buf, self._gen_count, self._health,
-                )
-                self.stats["level_passes"] += 1
-            else:
-                # mixed levels: one pool pass per level, mask-merged
-                logits = self._zero_logits
-                for li in present:
-                    mask = jnp.asarray(active & (levels == li))
-                    logits, self.pool = self._pool_pass(
-                        jnp.int32(li), self.params, self._tok[:, None], self._pos,
-                        self.pool, mask, logits,
+            # speculative lanes run their own draft/verify round; a
+            # spec lane without segment headroom (pos + k would cross
+            # max_len) falls back to a vanilla f32 step this iteration.
+            spec_now = np.zeros_like(active)
+            if self._spec_verify is not None:
+                for s in np.nonzero(active)[0]:
+                    if (self.scheduler.request_at(int(s)).speculative
+                            and self.scheduler.position(int(s)) + k < self.scfg.max_len):
+                        spec_now[s] = True
+            van_now = active & ~spec_now
+
+            if spec_now.any():
+                self._spec_round(spec_now, k)
+
+            if van_now.any():
+                levels = self.arbiter.idx
+                present = sorted(set(int(v) for v in levels[van_now]))
+                self._key, sub = jax.random.split(self._key)
+                if len(present) == 1:
+                    # hot path: homogeneous level -> ONE fused dispatch
+                    key = (van_now.tobytes(), present[0])
+                    if key != mask_key:
+                        mask_key, mask_dev = key, jnp.asarray(van_now)
+                    (self.pool, self._gen_buf, self._gen_count, self._tok,
+                     self._pos, self._health, hv) = self._tick(
+                        jnp.int32(present[0]), self.params, self._tok, self._pos,
+                        self.pool, mask_dev, sub,
+                        self._gen_buf, self._gen_count, self._health,
                     )
                     self.stats["level_passes"] += 1
-                tok, hv = self._finish(logits, sub)
-                active_dev = jnp.asarray(active)
-                (self._gen_buf, self._gen_count, self._tok, self._pos,
-                 self._health) = self._step_update(
-                    self._gen_buf, self._gen_count, self._tok, self._pos,
-                    self._health, tok, hv, active_dev,
-                )
-            self.stats["decode_steps"] += 1
+                else:
+                    # mixed levels: one pool pass per level, mask-merged
+                    logits = self._zero_logits
+                    for li in present:
+                        mask = jnp.asarray(van_now & (levels == li))
+                        logits, self.pool = self._pool_pass(
+                            jnp.int32(li), self.params, self._tok[:, None], self._pos,
+                            self.pool, mask, logits,
+                        )
+                        self.stats["level_passes"] += 1
+                    tok, hv = self._finish(logits, sub)
+                    active_dev = jnp.asarray(van_now)
+                    (self._gen_buf, self._gen_count, self._tok, self._pos,
+                     self._health) = self._step_update(
+                        self._gen_buf, self._gen_count, self._tok, self._pos,
+                        self._health, tok, hv, active_dev,
+                    )
+                self.stats["decode_steps"] += 1
             self._step += 1
 
-            eos_flags = np.zeros((self.scfg.n_slots,), bool)
-            if eos_mode:
-                hv_host = np.asarray(hv)  # the per-step EOS pull
-                eos_flags = hv_host[:, 0].astype(np.int32) == self.scfg.eos_id
-                self.arbiter.observe(
-                    self._step, nonfinite=hv_host[:, 1] < 0.5,
-                    amplitude=hv_host[:, 2], active=active,
-                )
-            elif self._step % self.scfg.health_sync_every == 0:
-                h = np.asarray(self._health)  # periodic aggregated sync
-                self.arbiter.observe(
-                    self._step, nonfinite=h[:, 0] < 0.5, amplitude=h[:, 1],
-                    active=active,
-                )
-                self._health = self._health_neutral.copy()  # template stays valid under donation
+            if van_now.any():
+                eos_flags = np.zeros((self.scfg.n_slots,), bool)
+                if eos_mode:
+                    hv_host = np.asarray(hv)  # the per-step EOS pull
+                    eos_flags = hv_host[:, 0].astype(np.int32) == self.scfg.eos_id
+                    self.arbiter.observe(
+                        self._step, nonfinite=hv_host[:, 1] < 0.5,
+                        amplitude=hv_host[:, 2], active=van_now,
+                    )
+                elif self._step % self.scfg.health_sync_every == 0:
+                    h = np.asarray(self._health)  # periodic aggregated sync
+                    self.arbiter.observe(
+                        self._step, nonfinite=h[:, 0] < 0.5, amplitude=h[:, 1],
+                        active=van_now,
+                    )
+                    self._health = self._health_neutral.copy()  # template stays valid under donation
 
-            for slot in np.nonzero(active)[0]:
-                reason = self.scheduler.advance(int(slot), eos=bool(eos_flags[slot]))
-                if reason is not None:
-                    self._finish_slot(int(slot), reason)
+                for slot in np.nonzero(van_now)[0]:
+                    reason = self.scheduler.advance(int(slot), eos=bool(eos_flags[slot]))
+                    if reason is not None:
+                        self._finish_slot(int(slot), reason)
 
         # hand results out AND release them from the scheduler: a
         # server outlives its serve() calls, so retaining per-request
@@ -628,11 +755,13 @@ class ContinuousBatchingServer:
         return rid
 
     def generate(self, prompts: List[List[int]], max_new: int = 32,
-                 level: Optional[str] = None) -> List[List[int]]:
+                 level: Optional[str] = None,
+                 speculative: bool = False) -> List[List[int]]:
         """BatchedServer-compatible convenience: serve the prompts and
         return token lists in input order."""
         reqs = [
-            Request(rid=self.next_rid(), prompt=list(p), max_new=max_new, level=level)
+            Request(rid=self.next_rid(), prompt=list(p), max_new=max_new,
+                    level=level, speculative=speculative)
             for p in prompts
         ]
         fins = self.serve(reqs)

@@ -1,0 +1,317 @@
+"""Ladder-speculative decoding: draft at a cheap rung, verify at f32.
+
+The precision ladder IS the draft/verify pair — no separate draft
+model, same weights.  A :class:`LadderSpeculativeDecoder` round:
+
+1. **draft** — ``k`` greedy tokens through the fused FAST path at a
+   configurable draft rung (``q8_8`` snaps activations to the paper's
+   Q8.8 grid before the W8A8 int8 dot; ``q16_16`` is the standard FAST
+   path), each step a single-token :func:`~repro.models.decode_step`.
+   The draft pass works on a throwaway copy of the caches — its
+   mutations are never committed.
+2. **verify** — ALL ``k+1`` positions (current token + k drafts) in ONE
+   batched :func:`~repro.models.segment_step` at the ``f32``/"exact"
+   rung.  ``argmax`` of the verify logits is, by construction, exactly
+   what vanilla f32 greedy decode would have emitted at each position
+   *given the same prefix* — so the longest prefix of drafts agreeing
+   with the verify argmaxes, PLUS the verify argmax at the first
+   disagreement (or at the end), can all be accepted.  Per round the
+   decoder therefore commits between 1 and ``k+1`` tokens, every one of
+   them an f32-exact token.
+3. **rollback** — :func:`~repro.models.commit_segment` merges the
+   verified segment into the caches, restoring every REJECTED
+   position's cache entries bit-for-bit (position-indexed KV entries
+   revert to their pre-segment contents; the cumulative SSM state rolls
+   back to the per-position candidate recorded during the segment).
+
+Exactness contract (pinned by tests/spec_harness.py across model
+families x draft rungs x seeds): the emitted token stream is
+token-for-token identical to vanilla f32 greedy decode, REGARDLESS of
+what the draft rung produces — a garbage draft costs throughput (every
+round still commits >= 1 verified token), never correctness.  This is
+the transprecision thesis in its sharpest form: the fast path is pure
+speculation; the precise path remains the sole correctness anchor.
+
+Acceptance-rate accounting: per round and per lane, ``k`` drafted /
+``m`` accepted (``m = `` length of the agreeing prefix).  The measured
+rate is a live precision signal — the serving integration feeds it to
+:class:`~repro.core.arbiter.SlotArbiter`, whose sustained-low-acceptance
+escalation moves a slot's DRAFT rung up the ladder (cheap drafts that
+keep missing cost more verify rounds than they save).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precision import MathEngine
+from repro.models import (
+    commit_segment,
+    decode_step,
+    init_caches,
+    prefill_step,
+    segment_step,
+    write_cache_slot,
+)
+from repro.models.config import ModelConfig
+from repro.models.layers import attach_quantized_weights
+
+__all__ = [
+    "SPEC_DRAFT_LEVELS",
+    "SpeculativeConfig",
+    "LadderSpeculativeDecoder",
+    "register_spec_steps",
+]
+
+#: draft rungs: engine level name -> model-layer dispatch string.  The
+#: f32 verify rung is NOT a draft option — drafting at the verify
+#: precision is strictly more work than vanilla decode.
+SPEC_DRAFT_LEVELS = (("q8_8", "fast8"), ("q16_16", "fast"))
+
+#: serving caches are f32 (the exact-mode consistency contract — see
+#: repro.runtime.serve.SERVE_CACHE_DTYPE).
+SPEC_CACHE_DTYPE = jnp.float32
+
+
+@dataclasses.dataclass
+class SpeculativeConfig:
+    """Knobs for one speculative decoder (or the server's spec mode).
+
+    ``k``: drafts per round (compile-time constant: the draft scan and
+    the k+1-wide verify segment are shaped by it).  ``draft_level``:
+    starting rung, one of :data:`SPEC_DRAFT_LEVELS`.  ``collect_trace``:
+    keep a per-round host trace (drafts, verify argmaxes, commit
+    counts) — the exactness harness replays it through a NumPy
+    reference simulator to check the acceptance accounting.
+    """
+
+    k: int = 4
+    draft_level: str = "q8_8"
+    max_len: int = 256
+    eos_id: Optional[int] = None
+    collect_trace: bool = False
+
+    def __post_init__(self):
+        names = tuple(lv for lv, _ in SPEC_DRAFT_LEVELS)
+        if self.k < 1:
+            raise ValueError("speculative k must be >= 1")
+        if self.draft_level not in names:
+            raise ValueError(
+                f"draft_level {self.draft_level!r} not a draft rung {names}"
+            )
+
+
+def _min_window(cfg: ModelConfig) -> Optional[int]:
+    ws = [l.window for l in cfg.period if l.window is not None]
+    return min(ws) if ws else None
+
+
+def register_spec_steps(engine: MathEngine, cfg: ModelConfig, k: int):
+    """Register the draft/verify step functions on ``engine`` and return
+    ``(draft_dispatch, verify_fn, draft_level_names)``.
+
+    ``draft_dispatch(level_idx, params, tok, pos, caches, lane_mask)``
+    runs ``k`` greedy single-token decode steps at the (traced) draft
+    rung and returns the drafted tokens (B, k); its cache mutations
+    live only inside the jit and are discarded.
+
+    ``verify_fn(params, tok, pos, drafts, caches, mask)`` runs the
+    batched f32 segment pass, computes the longest agreeing prefix, and
+    commits/rolls back the caches in the same dispatch.  Returns
+    ``(preds (B,k+1), n_commit (B,), caches', new_tok (B,),
+    new_pos (B,), finite (B,), amp (B,))``.
+    """
+    w = _min_window(cfg)
+    if w is not None and k + 1 > w:
+        raise ValueError(
+            f"speculative k={k} needs k+1 <= smallest attention window ({w}): "
+            "a verify segment must fit the rolling KV buffer"
+        )
+
+    def make_draft(mode):
+        def fn(params, tok, pos, caches, lane_mask):
+            def body(carry, _):
+                t, p, c = carry
+                logits, c = decode_step(
+                    params, t[:, None], p, c, cfg, mode=mode, lane_mask=lane_mask
+                )
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return (nxt, p + 1, c), nxt
+
+            (_, _, _), drafts = jax.lax.scan(body, (tok, pos, caches), None, length=k)
+            return drafts.T  # (k, B) -> (B, k)
+
+        return fn
+
+    engine.register("spec_draft", **{lv: make_draft(m) for lv, m in SPEC_DRAFT_LEVELS})
+    draft_names = tuple(lv for lv, _ in SPEC_DRAFT_LEVELS)
+    draft_disp, _ = engine.switched("spec_draft", levels=draft_names)
+    draft_disp = jax.jit(draft_disp)
+
+    def verify(params, tok, pos, drafts, caches, mask):
+        B = tok.shape[0]
+        seg = jnp.concatenate([tok[:, None], drafts], axis=1)          # (B, k+1)
+        seg_pos = pos[:, None] + jnp.arange(k + 1, dtype=jnp.int32)[None]
+        logits, after, aux = segment_step(
+            params, seg, seg_pos, caches, cfg, mode="exact", lane_mask=mask
+        )
+        preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)          # (B, k+1)
+        match = (drafts == preds[:, :k]).astype(jnp.int32)
+        m = jnp.cumprod(match, axis=1).sum(axis=1)                     # (B,) in [0, k]
+        n_commit = jnp.where(mask, m + 1, 0)
+        keep_pos = pos + m                                             # last accepted position
+        caches = commit_segment(
+            caches, after, aux, cfg,
+            keep_pos=keep_pos, keep_count=n_commit, active=mask,
+        )
+        last = jnp.take_along_axis(
+            preds, jnp.clip(n_commit - 1, 0, k)[:, None], axis=1
+        )[:, 0]
+        new_tok = jnp.where(mask, last, tok)
+        new_pos = pos + n_commit
+        finite = jnp.all(jnp.isfinite(logits), axis=(1, 2)) | ~mask
+        amp = jnp.where(mask, jnp.max(jnp.abs(logits), axis=(1, 2)), 0.0)
+        return preds, n_commit, caches, new_tok, new_pos, finite, amp
+
+    return draft_disp, jax.jit(verify), draft_names
+
+
+class LadderSpeculativeDecoder:
+    """Standalone speculative greedy decoder (the exactness-harness
+    subject and the benchmark unit; the serving integration lives in
+    :class:`~repro.runtime.serve.ContinuousBatchingServer`).
+
+    ``generate`` prefills each prompt at f32/"exact" (the same anchor
+    vanilla serving uses), then loops draft -> verify -> commit rounds
+    until every lane has its ``max_new`` tokens (or EOS).  The emitted
+    stream per lane is exactly ``max_new`` f32-greedy tokens.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, scfg: SpeculativeConfig,
+                 engine: Optional[MathEngine] = None):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.engine = engine or MathEngine(scfg.draft_level)
+        self.params = attach_quantized_weights(
+            params, self.engine.weight_cache, level="q16_16"
+        )
+        self._draft, self._verify, self.draft_levels = register_spec_steps(
+            self.engine, cfg, scfg.k
+        )
+        self._prefill = jax.jit(
+            lambda params, tokens, caches: prefill_step(
+                params, tokens, caches, cfg, mode="exact"
+            )
+        )
+        self._write = jax.jit(write_cache_slot)
+        self.stats: Dict[str, int] = {"rounds": 0, "drafted": 0, "accepted": 0}
+        self.trace: List[dict] = []
+
+    @property
+    def acceptance_rate(self) -> float:
+        d = self.stats["drafted"]
+        return self.stats["accepted"] / d if d else float("nan")
+
+    def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 32,
+                 draft_level: Optional[str] = None) -> List[List[int]]:
+        """Greedy speculative decode; returns per-prompt GENERATED
+        tokens (the first from the f32 prefill, like the servers).
+        Prompts may be ragged — each is prefilled at its exact length.
+        """
+        scfg = self.scfg
+        k = scfg.k
+        B = len(prompts)
+        level = draft_level or scfg.draft_level
+        li = jnp.int32(self.draft_levels.index(level))
+        need = max(len(p) for p in prompts) + max_new + k
+        if need > scfg.max_len:
+            raise ValueError(
+                f"max_len {scfg.max_len} too small: longest prompt + max_new + k "
+                f"needs {need} positions of speculative headroom"
+            )
+
+        caches = init_caches(self.cfg, B, scfg.max_len, dtype=SPEC_CACHE_DTYPE)
+        tok = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        for i, p in enumerate(prompts):
+            single = init_caches(self.cfg, 1, scfg.max_len, dtype=SPEC_CACHE_DTYPE)
+            logits, single = self._prefill(
+                self.params, jnp.asarray([list(p)], jnp.int32), single
+            )
+            caches = self._write(caches, single, jnp.int32(i))
+            tok[i] = int(jnp.argmax(logits, axis=-1)[0])
+            pos[i] = len(p)
+
+        out: List[List[int]] = [[int(tok[i])] for i in range(B)]
+        done = np.zeros((B,), bool)
+        if scfg.eos_id is not None:
+            done |= tok == scfg.eos_id
+        done |= max_new <= 1
+        tok_d = jnp.asarray(tok)
+        pos_d = jnp.asarray(pos)
+
+        while not done.all():
+            mask = jnp.asarray(~done)
+            drafts = self._draft(li, self.params, tok_d, pos_d, caches, mask)
+            preds, n_commit, caches, tok_d, pos_d, _, _ = self._verify(
+                self.params, tok_d, pos_d, drafts, caches, mask
+            )
+            preds_h = np.asarray(preds)
+            n_h = np.asarray(n_commit)
+            self.stats["rounds"] += 1
+            self.stats["drafted"] += int(k * (~done).sum())
+            self.stats["accepted"] += int(np.maximum(n_h - 1, 0).sum())
+            if scfg.collect_trace:
+                self.trace.append({
+                    "drafts": np.asarray(drafts).copy(),
+                    "preds": preds_h.copy(),
+                    "n_commit": n_h.copy(),
+                    "active": (~done).copy(),
+                })
+            for i in range(B):
+                if done[i]:
+                    continue
+                for j in range(int(n_h[i])):
+                    t = int(preds_h[i, j])
+                    out[i].append(t)
+                    if scfg.eos_id is not None and t == scfg.eos_id:
+                        done[i] = True
+                        break
+                    if len(out[i]) >= max_new:
+                        done[i] = True
+                        break
+        return [o[:max_new] for o in out]
+
+
+def vanilla_greedy_reference(cfg: ModelConfig, params, prompts, max_new: int,
+                             max_len: int, eos_id: Optional[int] = None,
+                             engine: Optional[MathEngine] = None) -> List[List[int]]:
+    """The correctness oracle: plain f32/"exact" greedy decode, one
+    token at a time — what the speculative stream must match
+    token-for-token."""
+    engine = engine or MathEngine("f32")
+    params = attach_quantized_weights(params, engine.weight_cache, level="q16_16")
+    pre = jax.jit(lambda pr, t, c: prefill_step(pr, t, c, cfg, mode="exact"))
+    dec = jax.jit(lambda pr, t, p, c: decode_step(pr, t, p, c, cfg, mode="exact"))
+    outs = []
+    for p in prompts:
+        caches = init_caches(cfg, 1, max_len, dtype=SPEC_CACHE_DTYPE)
+        logits, caches = pre(params, jnp.asarray([list(p)], jnp.int32), caches)
+        cur = int(jnp.argmax(logits, axis=-1)[0])
+        toks = [cur]
+        pos = len(p)
+        while len(toks) < max_new and not (eos_id is not None and cur == eos_id):
+            logits, caches = dec(
+                params, jnp.asarray([[cur]], jnp.int32), jnp.asarray([pos], jnp.int32),
+                caches,
+            )
+            cur = int(jnp.argmax(logits, axis=-1)[0])
+            toks.append(cur)
+            pos += 1
+        outs.append(toks)
+    return outs

@@ -17,8 +17,14 @@ from repro.models import decode_step, init_caches, init_params, prefill_step
         pytest.param(
             "deepseek_7b",
             marks=pytest.mark.xfail(
-                reason="pre-existing: MLA absorbed-decode quantized-KV error exceeds "
-                "bound on this toolchain — see ROADMAP 'Known-failing tier-1 tests'",
+                reason="pre-existing: dense-GQA int8-KV logit error 0.73 > 0.45 bound "
+                "on this toolchain.  Measured per-(layer, kv-head) dequant error is "
+                "UNIFORM and already at the int8 pow2 floor (k: 0.40/0.41/0.64/0.71%, "
+                "v: 0.69/0.66/0.65/0.40% of head amax; grid step is 0.39-0.79%), so "
+                "finer per-head exponents cannot close it — the excess is cross-layer "
+                "amplification of near-tied logits on the random-init smoke model "
+                "(per-step logit diffs 0.12/0.11/0.73/0.20).  See ROADMAP "
+                "'Known-failing tier-1 tests'",
                 strict=False,
             ),
         ),
@@ -59,6 +65,35 @@ def test_quantized_decode_close_to_bf16(arch):
     diff = np.abs(outs[True] - outs[False]).max()
     scale = np.abs(outs[False]).max()
     assert diff < 0.08 * scale + 0.15, (arch, diff, scale)
+
+
+def test_kv_quantization_is_core_pow2_kept_axes():
+    """The KV-cache quantizer IS quantize_pow2's kept-axes form: one
+    exponent per (batch, seq, kv-head) slice, bit-identical payloads —
+    cache quantization and weight/activation quantization share a
+    single grid definition."""
+    from repro.core.quantization import quantize_pow2
+    from repro.models.attention import _q8
+
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(2, 5, 3, 16)) * 10.0, jnp.float32)
+    q, e = _q8(x, axes=(3,))
+    assert q.dtype == jnp.int8 and e.shape == (2, 5, 3)
+    qt = quantize_pow2(x, bits=8, axis=(0, 1, 2))
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qt.q))
+    np.testing.assert_array_equal(np.asarray(e), np.asarray(qt.exp).reshape(2, 5, 3))
+    # per-head independence: rescaling ONE head leaves every other
+    # head's payload and exponent untouched
+    y = x.at[:, :, 1].multiply(64.0)
+    q2, e2 = _q8(y, axes=(3,))
+    np.testing.assert_array_equal(np.asarray(q2[:, :, [0, 2]]), np.asarray(q[:, :, [0, 2]]))
+    np.testing.assert_array_equal(np.asarray(e2[:, :, [0, 2]]), np.asarray(e[:, :, [0, 2]]))
+    np.testing.assert_array_equal(np.asarray(e2[:, :, 1]), np.asarray(e[:, :, 1]) + 6)
+    # round-trip error bounded by half a grid step per head
+    deq = np.asarray(q, np.float32) * np.exp2(np.asarray(e, np.float32))[..., None]
+    amax = np.abs(np.asarray(x)).max(axis=3)
+    assert (np.abs(deq - np.asarray(x)).max(axis=3) <= np.exp2(np.asarray(e)) / 2 + 1e-6).all()
+    assert (amax / np.exp2(np.asarray(e, np.float64)) <= 127.0 + 0.5).all()
 
 
 def test_quantized_cache_layout():

@@ -9,10 +9,11 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from _pbt import given, settings, strategies as st
 from repro.configs import smoke
 from repro.core.arbiter import SlotArbiter, SlotArbiterConfig
-from repro.models import init_caches, init_params, prefill_step
 from repro.runtime.scheduler import ContinuousScheduler, Request
+from repro.models import init_caches, init_params, prefill_step
 from repro.runtime.serve import (
     ContinuousBatchingServer,
     ContinuousServerConfig,
@@ -91,6 +92,91 @@ def test_scheduler_rejects_bad_requests():
 
 
 # ---------------------------------------------------------------------------
+# scheduler under random churn (property-based)
+# ---------------------------------------------------------------------------
+#
+# A seeded driver throws random admission/eviction/escalation traffic at
+# the scheduler and checks the invariants its docstring promises hold at
+# EVERY step, not just on the happy path the unit tests walk.
+
+
+def _run_churn(n_slots: int, n_requests: int, seed: int, max_len: int = 16):
+    """Drive one random serving episode; assert step-level invariants;
+    return (scheduler, requests, admission_order)."""
+    rng = np.random.default_rng(seed)
+    levels = ("q16_16", "f32")
+    s = ContinuousScheduler(n_slots=n_slots, max_len=max_len, eos_id=99,
+                            levels=levels)
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.integers(1, max_len - 1))
+        reqs.append(Request(
+            rid=i, prompt=[int(t) for t in rng.integers(0, 50, plen)],
+            max_new=int(rng.integers(1, 6)),
+            level=[None, *levels][int(rng.integers(0, 3))],
+        ))
+        s.submit(reqs[-1])
+
+    admit_order = []
+    live = {}                                     # slot -> rid (our shadow table)
+    steps = 0
+    while s.has_work():
+        steps += 1
+        assert steps < 10_000, "scheduler livelock"
+        for slot, r in s.admit():
+            assert slot not in live, "slot double-booked"   # no cache-row leak
+            live[slot] = r.rid
+            admit_order.append(r.rid)
+        for slot in list(s.active_slots()):
+            assert live[slot] == s.request_at(slot).rid     # binding is stable
+            if rng.random() < 0.7:                # decode progress is ragged
+                reason = s.advance(slot, eos=bool(rng.random() < 0.1))
+                assert s.position(slot) <= max_len
+                if reason is not None:            # eviction frees the row
+                    n = s.n_generated(slot)
+                    s.finish(slot, [0] * n, reason)
+                    del live[slot]
+    return s, reqs, admit_order
+
+
+@settings(max_examples=20)
+@given(st.integers(1, 4), st.integers(1, 12), st.integers(0, 10**6))
+def test_scheduler_churn_invariants(n_slots, n_requests, seed):
+    """Under arbitrary churn: FIFO admission, every request finished
+    exactly once with a sane token count, and every slot freed."""
+    s, reqs, admit_order = _run_churn(n_slots, n_requests, seed)
+    assert admit_order == sorted(admit_order)     # FIFO fairness
+    assert len(admit_order) == len(reqs)          # nobody starved
+    assert sorted(s.finished) == list(range(len(reqs)))
+    assert s.slots == [None] * n_slots            # all rows released
+    for req in reqs:
+        f = s.finished[req.rid]
+        assert 1 <= f.n_generated <= req.max_new
+        assert len(f.tokens) == len(req.prompt) + f.n_generated
+        assert f.reason in ("eos", "max_new", "max_len")
+        if f.reason == "max_len":
+            assert len(f.tokens) == s.max_len
+        if f.reason == "max_new":
+            assert f.n_generated == req.max_new
+
+
+@settings(max_examples=10)
+@given(st.integers(1, 3), st.integers(0, 10**6))
+def test_scheduler_rid_reuse_after_pop(n_slots, seed):
+    """pop_finished releases the rid: the same id can be resubmitted
+    and the second life is bookkept independently of the first."""
+    s, reqs, _ = _run_churn(n_slots, 5, seed)
+    for req in reqs:
+        fin = s.pop_finished(req.rid)
+        assert fin.rid == req.rid
+    assert s.finished == {} and s._submitted == set()   # state fully drained
+    s.submit(Request(rid=reqs[0].rid, prompt=[1, 2], max_new=1))
+    s.admit()
+    assert s.advance(0) == "max_new"
+    assert s.finish(0, [7], "max_new").n_generated == 1
+
+
+# ---------------------------------------------------------------------------
 # per-slot arbiter
 # ---------------------------------------------------------------------------
 
@@ -121,6 +207,101 @@ def test_slot_arbiter_amplitude_escalates_with_cooldown():
     assert list(idx) == [1, 0]                  # cooldown blocks the next rung
     idx = arb.observe(5, nonfinite=np.zeros(2, bool), amplitude=amp)
     assert list(idx) == [2, 0]                  # cooled: next rung
+
+
+def _acc_cfg(**kw):
+    base = dict(n_levels=3, start_idx=0, accept_threshold=0.5,
+                accept_patience=3, cooldown_steps=1, stable_steps=10**6)
+    base.update(kw)
+    return SlotArbiterConfig(**base)
+
+
+def _quiet(n):
+    return dict(nonfinite=np.zeros(n, bool), amplitude=np.zeros(n))
+
+
+def test_slot_arbiter_acceptance_escalates_after_patience():
+    """Sustained low draft acceptance steps the rung up — but only
+    after accept_patience consecutive low measurements, and one healthy
+    measurement resets the counter (no single-round flapping)."""
+    arb = SlotArbiter(2, _acc_cfg())
+    low = np.array([0.2, 0.9])
+    for step in range(2):
+        assert list(arb.observe(step, **_quiet(2), acceptance=low)) == [0, 0]
+    # third consecutive low measurement trips the escalation
+    assert list(arb.observe(2, **_quiet(2), acceptance=low)) == [1, 0]
+    assert arb.switches[-1][-1] == "acceptance"
+    # counter was reset by the switch: two lows don't re-trip...
+    assert list(arb.observe(3, **_quiet(2), acceptance=low)) == [1, 0]
+    assert list(arb.observe(4, **_quiet(2), acceptance=low)) == [1, 0]
+    # ...and a good round mid-run resets the count entirely
+    arb.observe(5, **_quiet(2), acceptance=np.array([0.8, 0.9]))
+    assert list(arb.observe(6, **_quiet(2), acceptance=low)) == [1, 0]
+    assert list(arb.observe(7, **_quiet(2), acceptance=low)) == [1, 0]
+    assert list(arb.observe(8, **_quiet(2), acceptance=low)) == [2, 0]
+
+
+def test_slot_arbiter_acceptance_cooldown_hysteresis():
+    """With a long cooldown, a slot that just escalated must sit out
+    the window even when low measurements keep accumulating."""
+    arb = SlotArbiter(1, _acc_cfg(accept_patience=1, cooldown_steps=5))
+    low = np.array([0.0])
+    assert list(arb.observe(0, **_quiet(1), acceptance=low)) == [1]
+    for step in range(1, 5):                     # inside the cooldown window
+        assert list(arb.observe(step, **_quiet(1), acceptance=low)) == [1], step
+    assert list(arb.observe(5, **_quiet(1), acceptance=low)) == [2]  # cooled
+
+
+def test_slot_arbiter_acceptance_never_demotes_below_floor():
+    """Acceptance is an ESCALATION-only signal: perfect acceptance never
+    drops a slot below the rung its request asked for, and demotion (on
+    stability) still stops at the floor."""
+    arb = SlotArbiter(1, _acc_cfg(stable_steps=2, cooldown_steps=1))
+    arb.reset_slot(0, start_idx=1)               # requested floor: rung 1
+    perfect = np.array([1.0])
+    for step in range(12):
+        idx = arb.observe(step, **_quiet(1), acceptance=perfect)
+        assert idx[0] >= 1, step                 # never below the floor
+    assert arb.idx[0] == 1
+
+
+def test_slot_arbiter_nan_rescue_takes_precedence_over_acceptance():
+    """A non-finite logit on the same step as a tripped acceptance
+    counter: the NaN rescue wins (correctness beats throughput) — jump
+    to the TOP rung, reason 'non-finite', no one-rung step."""
+    arb = SlotArbiter(1, _acc_cfg(accept_patience=1))
+    idx = arb.observe(0, nonfinite=np.array([True]), amplitude=np.zeros(1),
+                      acceptance=np.array([0.0]))
+    assert list(idx) == [2]                      # top, not start+1
+    assert arb.switches[-1][-1] == "non-finite"
+
+
+def test_slot_arbiter_unmeasured_acceptance_leaves_counter_untouched():
+    """NaN / negative acceptance marks 'no measurement this step'
+    (vanilla lanes, inactive slots): the low-counter neither grows nor
+    resets, so patience accumulates only over REAL measurements."""
+    arb = SlotArbiter(1, _acc_cfg())
+    low, nomeas = np.array([0.1]), np.array([np.nan])
+    arb.observe(0, **_quiet(1), acceptance=low)
+    arb.observe(1, **_quiet(1), acceptance=low)          # counter: 2
+    for step in range(2, 6):                             # gaps don't reset it
+        assert list(arb.observe(step, **_quiet(1), acceptance=nomeas)) == [0]
+        assert list(arb.observe(step, **_quiet(1), acceptance=np.array([-1.0]))) == [0]
+    assert list(arb.observe(6, **_quiet(1), acceptance=low)) == [1]  # 3rd real low
+    assert arb.switches[-1][-1] == "acceptance"
+
+
+def test_slot_arbiter_reset_clears_acceptance_counter():
+    """A new request admitted into the slot must not inherit the
+    previous request's low-acceptance streak."""
+    arb = SlotArbiter(1, _acc_cfg())
+    low = np.array([0.0])
+    arb.observe(0, **_quiet(1), acceptance=low)
+    arb.observe(1, **_quiet(1), acceptance=low)
+    arb.reset_slot(0)
+    for step in range(2, 4):                     # two lows: still under patience
+        assert list(arb.observe(step, **_quiet(1), acceptance=low)) == [0], step
+    assert list(arb.observe(4, **_quiet(1), acceptance=low)) == [1]
 
 
 def test_slot_arbiter_reset_slot_isolates_state():
