@@ -14,7 +14,11 @@ FAILS (exit 1) when either serving-perf invariant breaks:
    Absolute tokens/s are host-dependent, so the trajectory check
    compares the continuous/static SPEEDUP ratio by default (stable
    across runner generations); pass ``--absolute`` to compare raw
-   tokens/s against a baseline recorded on identical hardware.
+   tokens/s against a baseline recorded on identical hardware;
+3. **shared-prefix**: on the long-prompt shared-prefix workload the
+   paged pool (prefix sharing on) must not lose to the contiguous
+   engine, the prefix cache must record hits, and the paged/contiguous
+   speedup ratio must hold its trajectory vs the baseline.
 
 Refreshing the baseline after an intentional change: copy the CI
 artifact (or a local ``--json`` run's output) over
@@ -59,6 +63,33 @@ def check(current: dict, baseline: dict, tolerance: float, absolute: bool) -> li
             f"{what} regressed >{tolerance:.0%} vs baseline: "
             f"{cur:.3f} < {base:.3f} * {1 - tolerance:.2f}"
         )
+
+    # 3. shared-prefix workload: the paged pool (prefix sharing on) must
+    #    not lose to the contiguous engine on the long-prompt workload it
+    #    exists to win (same 5% tie-break grace), and its speedup ratio
+    #    must hold its trajectory vs the baseline.
+    sp = current.get("shared_prefix")
+    if sp is not None:
+        if sp["paged_tokens_per_s"] < sp["contiguous_tokens_per_s"] * 0.95:
+            failures.append(
+                f"paged+prefix-sharing LOSES to contiguous on the "
+                f"shared-prefix workload: {sp['paged_tokens_per_s']:.1f} < "
+                f"{sp['contiguous_tokens_per_s']:.1f} tokens/s "
+                f"(speedup {sp['paged_speedup']:.2f}x)"
+            )
+        if sp["prefix_hits"] == 0:
+            failures.append(
+                "prefix cache recorded ZERO hits on the shared-prefix "
+                "workload — sharing is not engaging"
+            )
+        base_sp = baseline.get("shared_prefix")
+        if base_sp is not None and sp["paged_speedup"] < \
+                base_sp["paged_speedup"] * (1.0 - tolerance):
+            failures.append(
+                f"paged/contiguous shared-prefix speedup regressed "
+                f">{tolerance:.0%} vs baseline: {sp['paged_speedup']:.3f} < "
+                f"{base_sp['paged_speedup']:.3f} * {1 - tolerance:.2f}"
+            )
     return failures
 
 
@@ -85,6 +116,16 @@ def main(argv=None) -> int:
         f"continuous={current['continuous_tokens_per_s']:.1f} tok/s "
         f"(speedup {current['speedup']:.2f}x; baseline {baseline['speedup']:.2f}x)"
     )
+    sp = current.get("shared_prefix")
+    if sp is not None:
+        mem = sp["memory"]
+        print(
+            f"shared-prefix: contiguous={sp['contiguous_tokens_per_s']:.1f} "
+            f"tok/s, paged={sp['paged_tokens_per_s']:.1f} tok/s "
+            f"(speedup {sp['paged_speedup']:.2f}x, hits {sp['prefix_hits']}, "
+            f"pages {mem['high_water_pages']}/{mem['contiguous_pages_equiv']} "
+            f"= {mem['capacity_ratio']:.2f} of contiguous)"
+        )
     for f in failures:
         print(f"SERVING PERF FAIL: {f}", file=sys.stderr)
     return 1 if failures else 0

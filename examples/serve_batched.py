@@ -11,13 +11,13 @@ import numpy as np
 from repro.configs import smoke
 from repro.core.precision import Mode
 from repro.models import init_params
-from repro.runtime.serve import BatchedServer, ServerConfig
+from repro.runtime.serve import BatchedServer, ServingConfig
 
 
 def main():
     cfg = smoke("gemma2_2b")  # local/global alternating + softcaps
     params = init_params(cfg, jax.random.PRNGKey(0))
-    srv = BatchedServer(cfg, params, ServerConfig(max_batch=4, max_len=64, max_new=12))
+    srv = BatchedServer(cfg, params, ServingConfig(n_slots=4, max_len=64, max_new=12))
 
     prompts = [[1, 2, 3, 4], [9, 8, 7], [5, 5, 5, 5, 5], [2, 4, 6, 8, 10, 12]]
     print("PRECISE generations:")

@@ -3,14 +3,21 @@
 Smoke (CPU):
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2_2b --smoke
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2_2b --continuous
+    PYTHONPATH=src python -m repro.launch.serve --arch deepseek_7b \
+        --continuous --paged --prefix-sharing
 
-``--continuous`` runs the continuous-batching engine (slot-paged pool,
-per-request precision via ``--levels``) on a mixed-length/mixed-budget
-workload; the default runs the static lock-step ``BatchedServer``.
+``--continuous`` runs the continuous-batching engine (per-request
+precision via ``--levels``) on a mixed-length/mixed-budget workload;
+the default runs the static lock-step ``BatchedServer``.  Both routes
+build ONE :class:`~repro.runtime.config.ServingConfig`.
 ``--continuous --speculative`` serves every request through
 ladder-speculative decoding (draft at ``--draft-level``, verify at f32
 — output identical to vanilla f32 greedy; watch ``spec_rounds`` /
-``spec_accepted`` in the printed stats).
+``spec_accepted`` in the printed stats).  ``--paged`` switches the
+cache pool to fixed-size pages + block tables with chunked prefill
+(``--prefill-chunk`` tokens per fixed-shape segment); add
+``--prefix-sharing`` to share full prefix pages between requests
+(full-context attention models only).
 """
 
 from __future__ import annotations
@@ -41,18 +48,25 @@ def main():
                     help="draft rung for --speculative")
     ap.add_argument("--spec-k", type=int, default=3,
                     help="draft tokens per speculative round")
+    ap.add_argument("--paged", action="store_true",
+                    help="with --continuous: paged cache pool + chunked prefill")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="cache rows per page for --paged")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill segment length (default: page size)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="with --paged: share full prefix pages across requests")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="total pages in the full-length pool (default: sized "
+                         "to the slot count)")
     args = ap.parse_args()
 
     from repro.configs import smoke
     from repro.core.precision import Mode
     from repro.models import init_params
+    from repro.runtime.config import ServingConfig
     from repro.runtime.scheduler import Request
-    from repro.runtime.serve import (
-        BatchedServer,
-        ContinuousBatchingServer,
-        ContinuousServerConfig,
-        ServerConfig,
-    )
+    from repro.runtime.serve import BatchedServer, ContinuousBatchingServer
 
     cfg = smoke(args.arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -68,8 +82,12 @@ def main():
         )
         srv = ContinuousBatchingServer(
             cfg, params,
-            ContinuousServerConfig(n_slots=args.slots, max_len=128,
-                                   speculative=spec),
+            ServingConfig(
+                n_slots=args.slots, max_len=128, speculative=spec,
+                cache="paged" if args.paged else "contiguous",
+                page_size=args.page_size, prefill_chunk=args.prefill_chunk,
+                prefix_sharing=args.prefix_sharing, n_pages=args.n_pages,
+            ),
         )
         levels = args.levels.split(",") if args.levels else [None]
         reqs = [
@@ -83,12 +101,14 @@ def main():
             f = fins[r.rid]
             print(f"req{r.rid} [{r.level or 'default'}] ({f.reason}): {f.tokens}")
         print(f"stats: {srv.stats}")
+        if args.paged:
+            print(f"pages: {srv.cache_ops.report()}")
         return
 
     srv = BatchedServer(
         cfg, params,
-        ServerConfig(max_batch=4, max_len=128, max_new=args.max_new,
-                     start_mode=Mode(args.mode)),
+        ServingConfig(n_slots=4, max_len=128, max_new=args.max_new,
+                      default_level=Mode(args.mode)),
     )
     for i, seq in enumerate(srv.generate(prompts)):
         print(f"req{i}: {seq}")

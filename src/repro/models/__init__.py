@@ -12,6 +12,7 @@ from repro.models.config import (
     smoke_config,
 )
 from repro.models.model import (
+    cache_layout,
     commit_segment,
     decode_step,
     init_caches,

@@ -31,6 +31,7 @@ __all__ = [
     "param_specs",
     "init_params",
     "init_caches",
+    "cache_layout",
     "train_loss",
     "prefill_step",
     "decode_step",
@@ -88,6 +89,31 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (cfg.n_periods,) + x.shape).copy(), one
     )
+
+
+def cache_layout(cfg: ModelConfig, max_len: int):
+    """The model's cache-memory layout, one entry per period position:
+    ``(key, kind, L)`` where ``key`` is the cache-tree key (``pos{i}``),
+    ``kind`` is the layer kind and ``L`` is the POSITION-INDEXED cache
+    length (``min(window, max_len)`` for sliding-window attention,
+    ``max_len`` for full attention / MLA) — or ``None`` for cumulative
+    state (SSM), which is O(1) per slot and position-free.
+
+    This is the single source of truth the paged
+    :class:`~repro.runtime.cachepool.PagedCachePool` builds its page
+    groups from: position-indexed caches page; cumulative caches stay
+    slot-contiguous.
+    """
+    out = []
+    for i, spec in enumerate(cfg.period):
+        if spec.kind in ("attn",):
+            L = min(spec.window, max_len) if spec.window else max_len
+            out.append((f"pos{i}", spec.kind, L))
+        elif spec.kind == "mla":
+            out.append((f"pos{i}", "mla", max_len))
+        else:
+            out.append((f"pos{i}", spec.kind, None))
+    return out
 
 
 def reset_cache_slot(caches, cfg: ModelConfig, slot):

@@ -154,14 +154,31 @@ class ContinuousScheduler:
 
     # -- admission ----------------------------------------------------------
 
-    def admit(self) -> List[Tuple[int, Request]]:
+    def admit(self, can_admit=None, limit=None) -> List[Tuple[int, Request]]:
         """Bind pending requests to free slots, FIFO.  Returns the
-        (slot, request) pairs the server must now prefill + scatter."""
+        (slot, request) pairs the server must now prefill + scatter.
+
+        ``can_admit(request) -> bool`` is an optional CAPACITY predicate
+        (the paged pool's free-page check): admission stops at the FIRST
+        rejected request — skipping ahead would break FIFO order, and
+        the head request becomes admissible again as running requests
+        finish and release their pages.
+
+        ``limit`` caps admissions per call.  A capacity-predicated
+        caller MUST admit one request per call (``limit=1``) and
+        allocate before calling again: the predicate reads free
+        capacity at call time, so approving several requests in one
+        batch would check them all against the same un-decremented
+        free-page count and over-commit the pool."""
         out = []
         for i in range(self.n_slots):
             if not self.pending:
                 break
+            if limit is not None and len(out) >= limit:
+                break
             if self.slots[i] is None:
+                if can_admit is not None and not can_admit(self.pending[0]):
+                    break
                 req = self.pending.popleft()
                 self.slots[i] = _SlotEntry(req)
                 out.append((i, req))

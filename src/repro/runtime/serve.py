@@ -62,52 +62,52 @@ once per request at eviction; health syncs on a configurable cadence).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.arbiter import SlotArbiter, SlotArbiterConfig
+from repro.core.arbiter import SlotArbiter
 from repro.core.precision import MathEngine, Mode, PrecisionLevel
 from repro.models import (
+    commit_segment,
     decode_step,
     init_caches,
     prefill_step,
-    reset_cache_slot,
-    write_cache_slot,
+    segment_step,
 )
 from repro.models.config import ModelConfig
 from repro.models.layers import attach_quantized_weights
-from repro.runtime.scheduler import ContinuousScheduler, FinishedRequest, Request
-from repro.runtime.speculative import (
-    SPEC_DRAFT_LEVELS,
-    SpeculativeConfig,
-    register_spec_steps,
+from repro.runtime.cachepool import CacheOps, ContiguousCacheOps, PagedCachePool
+from repro.runtime.config import (
+    SERVE_CACHE_DTYPE,
+    SERVE_STEP_LEVELS,
+    ServingConfig,
 )
+from repro.runtime.scheduler import ContinuousScheduler, FinishedRequest, Request
+from repro.runtime.speculative import SPEC_DRAFT_LEVELS, register_spec_steps
 
 __all__ = [
+    "ServingConfig",
     "ServerConfig",
     "BatchedServer",
     "ContinuousServerConfig",
     "ContinuousBatchingServer",
     "SERVE_STEP_LEVELS",
+    "SERVE_CACHE_DTYPE",
 ]
-
-#: engine levels the serve steps are implemented at -> model-layer
-#: dispatch string.  The precise rung runs the models' "exact" (f32
-#: serving) mode rather than the bf16 training mode — see module
-#: docstring.
-SERVE_STEP_LEVELS = (("q16_16", "fast"), ("f32", "exact"))
-
-#: serving caches are f32 (bf16 would round the decode side of the
-#: prefill/decode consistency contract only); quantized KV stays the
-#: FAST-path memory option.
-SERVE_CACHE_DTYPE = jnp.float32
 
 
 @dataclasses.dataclass
 class ServerConfig:
+    """Deprecated: use :class:`~repro.runtime.config.ServingConfig`.
+
+    The static server's historical kwarg surface (``max_batch`` /
+    ``start_mode``).  Kept as a warning shim; :meth:`to_serving` is the
+    field mapping."""
+
     max_batch: int = 4
     max_len: int = 256
     max_new: int = 32
@@ -116,6 +116,20 @@ class ServerConfig:
     start_mode: Any = Mode.PRECISE    # Mode compat alias or ladder level name
     seed: int = 0
 
+    def __post_init__(self):
+        warnings.warn(
+            "ServerConfig is deprecated; use repro.runtime.ServingConfig "
+            "(max_batch -> n_slots, start_mode -> default_level)",
+            DeprecationWarning, stacklevel=3,
+        )
+
+    def to_serving(self) -> ServingConfig:
+        return ServingConfig(
+            n_slots=self.max_batch, max_len=self.max_len, eos_id=self.eos_id,
+            temperature=self.temperature, default_level=self.start_mode,
+            seed=self.seed, max_new=self.max_new,
+        )
+
 
 class BatchedServer:
     """Static batching (see module docstring for the migration table to
@@ -123,10 +137,17 @@ class BatchedServer:
     workloads — this class remains the lock-step baseline and the
     simplest correctness oracle)."""
 
-    def __init__(self, cfg: ModelConfig, params, scfg: ServerConfig):
+    def __init__(self, cfg: ModelConfig, params, scfg):
+        if isinstance(scfg, ServerConfig):
+            scfg = scfg.to_serving()
+        if scfg.cache != "contiguous":
+            raise ValueError(
+                "BatchedServer supports cache='contiguous' only; the paged "
+                "pool lives on ContinuousBatchingServer"
+            )
         self.cfg = cfg
         self.scfg = scfg
-        self.engine = MathEngine(scfg.start_mode)
+        self.engine = MathEngine(scfg.default_level)
         # quantize-once: every FAST weight gets its int8 payload here,
         # keyed in the engine's cache; the original float leaves stay
         # (precise path + re-attachment after invalidate_weights).
@@ -176,9 +197,9 @@ class BatchedServer:
         ).astype(jnp.int32)
 
     def generate(self, prompts: List[List[int]]) -> List[List[int]]:
-        """Greedy/temperature generation for up to max_batch prompts."""
+        """Greedy/temperature generation for up to n_slots prompts."""
         scfg = self.scfg
-        assert len(prompts) <= scfg.max_batch
+        assert len(prompts) <= scfg.n_slots
         B = len(prompts)
         key = jax.random.PRNGKey(scfg.seed)
 
@@ -233,26 +254,21 @@ class BatchedServer:
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
-class ContinuousServerConfig:
-    n_slots: int = 4
-    max_len: int = 256
-    eos_id: Optional[int] = None
-    temperature: float = 0.0          # 0 = greedy
-    default_level: str = "f32"        # level for requests without their own
-    seed: int = 0
-    #: health-signal sync cadence (decode steps) when NO eos_id is set.
-    #: With eos_id the per-step (B, 3) EOS pull carries the signals for
-    #: free; without it the loop is fully async and the arbiter sees
-    #: device-accumulated signals every ``health_sync_every`` steps.
-    health_sync_every: int = 8
-    arbiter: SlotArbiterConfig = dataclasses.field(
-        default_factory=lambda: SlotArbiterConfig(n_levels=len(SERVE_STEP_LEVELS))
-    )
-    #: enable ladder-speculative decoding for requests that ask for it
-    #: (``Request.speculative``).  ``None`` disables (such requests are
-    #: rejected at submission).  See repro.runtime.speculative.
-    speculative: Optional[SpeculativeConfig] = None
+class ContinuousServerConfig(ServingConfig):
+    """Deprecated: use :class:`~repro.runtime.config.ServingConfig`.
+
+    Pure alias — every historical field (``n_slots`` ... ``speculative``)
+    is a :class:`ServingConfig` field with the same name, default and
+    position, so existing call sites work unchanged modulo the
+    deprecation warning."""
+
+    def __post_init__(self):
+        warnings.warn(
+            "ContinuousServerConfig is deprecated; use "
+            "repro.runtime.ServingConfig (same field names)",
+            DeprecationWarning, stacklevel=3,
+        )
+        super().__post_init__()
 
 
 class ContinuousBatchingServer:
@@ -285,7 +301,7 @@ class ContinuousBatchingServer:
     exponent; per-row activation scales are the noted next step.)
     """
 
-    def __init__(self, cfg: ModelConfig, params, scfg: ContinuousServerConfig):
+    def __init__(self, cfg: ModelConfig, params, scfg: ServingConfig):
         self.cfg = cfg
         self.scfg = scfg
         self.level_names = tuple(lv for lv, _ in SERVE_STEP_LEVELS)
@@ -301,9 +317,22 @@ class ContinuousBatchingServer:
         )
         if scfg.health_sync_every < 1:
             raise ValueError("health_sync_every must be >= 1")
-        # the slot-paged KV/SSM-state pool: allocated once, reused across
-        # every request the server ever serves
-        self.pool = init_caches(cfg, scfg.n_slots, scfg.max_len, dtype=SERVE_CACHE_DTYPE)
+        # the cache pool behind the CacheOps surface: slot-contiguous
+        # rows (legacy) or the paged block pool — allocated once either
+        # way, reused across every request the server ever serves
+        self.paged = scfg.cache == "paged"
+        self.cache_ops: CacheOps
+        if self.paged:
+            self.cache_ops = PagedCachePool(
+                cfg, scfg.n_slots, scfg.max_len, scfg.page_size,
+                dtype=SERVE_CACHE_DTYPE, n_pages=scfg.n_pages,
+                prefix_sharing=scfg.prefix_sharing,
+            )
+        else:
+            self.cache_ops = ContiguousCacheOps(
+                cfg, scfg.n_slots, scfg.max_len, dtype=SERVE_CACHE_DTYPE
+            )
+        self.pool = self.cache_ops.alloc()
         self._tok = jnp.zeros((scfg.n_slots,), jnp.int32)
         self._pos = jnp.zeros((scfg.n_slots,), jnp.int32)
         # generated tokens stay ON DEVICE in a per-slot ring (pulled
@@ -336,7 +365,12 @@ class ContinuousBatchingServer:
         self.stats = {
             "decode_steps": 0, "level_passes": 0, "prefills": 0,
             "spec_rounds": 0, "spec_drafted": 0, "spec_accepted": 0,
+            "prefill_chunks": 0, "prefix_hits": 0, "prefix_tokens_reused": 0,
         }
+        #: trace-time counter for the fixed-shape chunk-prefill step —
+        #: pinned by the zero-retrace test: after warmup it must not
+        #: move, whatever mix of prompt lengths is admitted.
+        self._chunk_traces = 0
         self._build()
 
     # -- jitted step functions ---------------------------------------------
@@ -507,14 +541,131 @@ class ContinuousBatchingServer:
 
             self._spec_update = jax.jit(spec_update, donate_argnums=(0, 1))
 
-        self._write = jax.jit(write_cache_slot, donate_argnums=(0,))
-        self._reset = jax.jit(
-            lambda pool, slot: reset_cache_slot(pool, cfg, slot), donate_argnums=(0,)
-        )
+        # cache lifecycle goes through the CacheOps surface.  The
+        # contiguous ops are pure device functions -> jittable as-is;
+        # the paged ops carry host bookkeeping (tables, refcounts) and
+        # are driven un-jitted with jitted adapters (below).
+        if not self.paged:
+            ops = self.cache_ops
+            self._write = jax.jit(ops.write, donate_argnums=(0,))
+            self._reset = jax.jit(ops.reset, donate_argnums=(0,))
+        else:
+            self._write = self._reset = None
+            self._build_paged(dec_disp, mask_cache_view, finish, step_update)
         self._zero_logits = jnp.zeros((self.scfg.n_slots, cfg.vocab), jnp.float32)
         self._health_neutral = jnp.tile(
             jnp.asarray([1.0, 0.0], jnp.float32), (self.scfg.n_slots, 1)
         )
+
+    def _build_paged(self, dec_disp, mask_cache_view, finish, step_update):
+        """The paged pool's jitted adapters: every step wraps the same
+        level-switched bodies the contiguous path runs, between a
+        block-table GATHER (pages -> the logical slot-contiguous view
+        the model steps already consume) and a row/page SCATTER of
+        exactly what the step wrote.  Block tables are jit ARGUMENTS —
+        allocation/CoW/sharing change table content, never shapes, so
+        the serving loop stays zero-retrace."""
+        cfg = self.cfg
+        pool: PagedCachePool = self.cache_ops
+        C = self.scfg.resolved_chunk
+
+        # chunked prefill: ONE fixed (1, C) segment shape for every
+        # prompt length (the contiguous path's exact-length prefill
+        # retraces per length; this is the tentpole's TTFT fix).  The
+        # tail chunk keeps only its r valid rows: commit_segment rolls
+        # the pad positions' writes back bit-for-bit (same rollback
+        # machinery as speculative verify).
+        def make_chunk(mode):
+            def fn(params, tokens, positions, view, keep_pos, keep_count):
+                self._chunk_traces += 1  # trace-time side effect (counting hook)
+                logits, after, aux = segment_step(
+                    params, tokens, positions, view, cfg, mode=mode
+                )
+                view = commit_segment(
+                    after=after, before=view, seg_aux=aux, cfg=cfg,
+                    keep_pos=keep_pos, keep_count=keep_count,
+                    active=jnp.ones((1,), bool),
+                )
+                last = jnp.take_along_axis(
+                    logits, jnp.clip(keep_count - 1, 0, C - 1).reshape(1, 1, 1),
+                    axis=1,
+                )[:, 0]
+                return last, view
+            return fn
+
+        self.engine.register(
+            "chunk", **{lv: make_chunk(m) for lv, m in SERVE_STEP_LEVELS}
+        )
+        chunk_disp, _ = self.engine.switched("chunk", levels=self.level_names)
+
+        def chunk_admit(level_idx, params, tokens, positions, state,
+                        slot_tables, scatter_ids, slot, keep_pos, keep_count):
+            view = pool.slot_view(state, slot_tables, slot)
+            last, view = chunk_disp(
+                level_idx, params, tokens, positions, view, keep_pos, keep_count
+            )
+            return last, pool.slot_commit(state, scatter_ids, slot, view)
+
+        self._chunk_admit = jax.jit(chunk_admit, donate_argnums=(4,))
+
+        def tick_p(level_idx, params, tok, pos, state, tables, mask, key,
+                   gen_buf, gen_count, health):
+            """Paged homogeneous-level decode: gather -> fused step ->
+            scatter the ONE row each active lane wrote.  Masked lanes
+            are only empty slots here (zero tables -> pristine gather),
+            mirroring the contiguous ``tick``."""
+            view = pool.device_view(state, tables)
+            logits, new_view = dec_disp(
+                level_idx, params, tok[:, None], pos, view, mask
+            )
+            state = pool.commit_rows(state, tables, new_view, pos, mask)
+            new_tok, hv = finish(logits, key)
+            gen_buf, gen_count, tok, pos, health = step_update(
+                gen_buf, gen_count, tok, pos, health, new_tok, hv, mask
+            )
+            return state, gen_buf, gen_count, tok, pos, health, hv
+
+        self._tick_p = jax.jit(tick_p, donate_argnums=(2, 3, 4, 8, 9, 10))
+
+        def pool_pass_p(level_idx, params, tok, pos, state, tables, mask,
+                        logits_acc):
+            """Paged mixed-level pass: other levels' lanes are LIVE in
+            the page pool, so the gathered view is pristine-masked (the
+            isolation contract) before the pass; their rows are dropped
+            at the scatter."""
+            view = mask_cache_view(pool.device_view(state, tables), mask)
+            logits, new_view = dec_disp(level_idx, params, tok, pos, view, mask)
+            state = pool.commit_rows(state, tables, new_view, pos, mask)
+            logits_acc = jnp.where(mask[:, None], logits, logits_acc)
+            return logits_acc, state
+
+        self._pool_pass_p = jax.jit(pool_pass_p, donate_argnums=(4,))
+
+        if self.scfg.speculative is not None:
+            k = self.scfg.speculative.k
+            draft_j, verify_j = self._spec_draft, self._spec_verify
+
+            def spec_draft_p(ri, params, tok, pos, state, tables, dmask):
+                return draft_j(ri, params, tok, pos,
+                               pool.device_view(state, tables), dmask)
+
+            self._spec_draft_p = jax.jit(spec_draft_p)
+
+            def spec_verify_p(params, tok, pos, drafts, state, tables, mask):
+                """Verify + page-granular rollback: the committed view's
+                k+1 segment rows carry accepted tokens' NEW bits and
+                rejected positions' PRE-SEGMENT bits, so scattering all
+                k+1 rows back restores rejected pages bit-for-bit."""
+                view = pool.device_view(state, tables)
+                preds, n_commit, view, new_tok, new_pos, finite, amp = verify_j(
+                    params, tok, pos, drafts, view, mask
+                )
+                state = pool.commit_rows(
+                    state, tables, view, pos, mask, n_rows=k + 1
+                )
+                return preds, n_commit, state, new_tok, new_pos, finite, amp
+
+            self._spec_verify_p = jax.jit(spec_verify_p, donate_argnums=(4,))
 
     # -- admission / eviction ----------------------------------------------
 
@@ -538,14 +689,17 @@ class ContinuousBatchingServer:
             li = self._level_idx(req)
         self.arbiter.reset_slot(slot, li)
         plen = len(req.prompt)
-        logits, single = self._prefill(
-            jnp.int32(li), self.params, jnp.asarray([req.prompt], jnp.int32),
-            self._single_template,
-        )
+        if self.paged:
+            logits = self._prefill_chunked(slot, req.prompt, li)
+        else:
+            logits, single = self._prefill(
+                jnp.int32(li), self.params, jnp.asarray([req.prompt], jnp.int32),
+                self._single_template,
+            )
+            self.pool = self._write(self.pool, single, slot)
         self.stats["prefills"] += 1
         self._key, sub = jax.random.split(self._key)
         tok, hv = self._finish(logits, sub)
-        self.pool = self._write(self.pool, single, slot)
         self._tok = self._tok.at[slot].set(tok[0])
         self._pos = self._pos.at[slot].set(plen)
         self._gen_buf = self._gen_buf.at[slot, 0].set(tok[0])
@@ -560,6 +714,49 @@ class ContinuousBatchingServer:
         if reason is not None:
             self._finish_slot(slot, reason)
 
+    def _prefill_chunked(self, slot: int, prompt: List[int], li: int):
+        """Paged admission: prefix-match + attach shared pages, then
+        feed the unmatched tail through the fixed-shape chunk step —
+        every admission costs ``ceil(tail / C)`` dispatches of ONE
+        compiled executable regardless of prompt length (the contiguous
+        path compiles per distinct length), and a decode tick can run
+        between chunks of later admissions.  Returns the last-token
+        logits (1, vocab) for first-token sampling."""
+        pool: PagedCachePool = self.cache_ops
+        self.pool, matched, chain = pool.prepare_admission(self.pool, slot, prompt)
+        if matched:
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_tokens_reused"] += matched
+        C = self.scfg.resolved_chunk
+        plen = len(prompt)
+        li_dev = jnp.int32(li)
+        slot_dev = jnp.int32(slot)
+        # tables are fully allocated by prepare_admission -> constant
+        # over the chunk loop
+        slot_tables = pool.slot_tables(slot)
+        scatter_ids = pool.scatter_ids(slot)
+        last = None
+        start = matched
+        while start < plen:
+            r = min(C, plen - start)
+            toks = np.zeros((1, C), np.int32)
+            toks[0, :r] = prompt[start : start + r]
+            positions = start + np.arange(C, dtype=np.int32)[None]
+            last, self.pool = self._chunk_admit(
+                li_dev, self.params, jnp.asarray(toks), jnp.asarray(positions),
+                self.pool, slot_tables, scatter_ids, slot_dev,
+                jnp.asarray([start + r - 1], jnp.int32),
+                jnp.asarray([r], jnp.int32),
+            )
+            self.stats["prefill_chunks"] += 1
+            start += r
+        # matched <= plen - 1 by construction (the block holding the
+        # first decode write is never attached shared), so at least one
+        # chunk always runs and `last` is real logits.
+        assert last is not None
+        pool.finish_admission(slot, chain, matched)
+        return last
+
     def _finish_slot(self, slot: int, reason: str) -> FinishedRequest:
         """Pull the request's generated tokens (the one device->host
         transfer a request ever costs in async mode), record it
@@ -568,7 +765,13 @@ class ContinuousBatchingServer:
         n = self.scheduler.n_generated(slot)
         toks = np.asarray(self._gen_buf[slot, :n]).tolist()
         fin = self.scheduler.finish(slot, toks, reason)
-        self.pool = self._reset(self.pool, jnp.int32(slot))
+        if self.paged:
+            # release the slot's page references (shared pages survive in
+            # the prefix cache) and zero its cumulative SSM lanes; page
+            # PAYLOADS are not touched — allocation pristine-fills.
+            self.pool = self.cache_ops.reset(self.pool, slot)
+        else:
+            self.pool = self._reset(self.pool, jnp.int32(slot))
         self._tok = self._tok.at[slot].set(0)
         self._pos = self._pos.at[slot].set(0)
         self._gen_count = self._gen_count.at[slot].set(0)
@@ -589,18 +792,32 @@ class ContinuousBatchingServer:
         per-step (B, 3) pull)."""
         rungs = self.draft_arbiter.idx
         present = sorted(set(int(v) for v in rungs[spec_now]))
+        tables = self.cache_ops.device_tables() if self.paged else None
         drafts = None
         for ri in present:
             dmask = jnp.asarray(spec_now & (rungs == ri))
-            part = self._spec_draft(
-                jnp.int32(ri), self.params, self._tok, self._pos, self.pool, dmask
-            )
+            if self.paged:
+                part = self._spec_draft_p(
+                    jnp.int32(ri), self.params, self._tok, self._pos,
+                    self.pool, tables, dmask,
+                )
+            else:
+                part = self._spec_draft(
+                    jnp.int32(ri), self.params, self._tok, self._pos, self.pool, dmask
+                )
             drafts = part if drafts is None else jnp.where(dmask[:, None], part, drafts)
         mask_dev = jnp.asarray(spec_now)
-        (preds, n_commit, self.pool, self._tok, self._pos,
-         finite, amp) = self._spec_verify(
-            self.params, self._tok, self._pos, drafts, self.pool, mask_dev
-        )
+        if self.paged:
+            (preds, n_commit, self.pool, self._tok, self._pos,
+             finite, amp) = self._spec_verify_p(
+                self.params, self._tok, self._pos, drafts, self.pool,
+                tables, mask_dev,
+            )
+        else:
+            (preds, n_commit, self.pool, self._tok, self._pos,
+             finite, amp) = self._spec_verify(
+                self.params, self._tok, self._pos, drafts, self.pool, mask_dev
+            )
         self._gen_buf, self._gen_count = self._spec_update(
             self._gen_buf, self._gen_count, preds, n_commit, mask_dev
         )
@@ -661,9 +878,26 @@ class ContinuousBatchingServer:
         wanted = [r.rid for r in requests]
         k = self.scfg.speculative.k if self.scfg.speculative is not None else 0
         mask_key, mask_dev = None, None  # device occupancy mask, uploaded on membership change
+        can_admit = None
+        if self.paged:
+            # paged capacity predicate: FIFO admission stops while the
+            # head request's worst-case block span exceeds free pages
+            # (running requests release pages as they finish)
+            can_admit = lambda r: self.cache_ops.can_admit(r.prompt)
         while self.scheduler.has_work():
-            for slot, req in self.scheduler.admit():
-                self._admit(slot, req)
+            if can_admit is None:
+                for slot, req in self.scheduler.admit():
+                    self._admit(slot, req)
+            else:
+                # one admission per admit() call: _admit allocates the
+                # request's pages, so the NEXT head's capacity check
+                # must see the decremented free count (approving a
+                # whole batch against one stale count over-commits)
+                while True:
+                    pairs = self.scheduler.admit(can_admit, limit=1)
+                    if not pairs:
+                        break
+                    self._admit(*pairs[0])
 
             active = self.scheduler.active_mask()
             if not active.any():
@@ -680,6 +914,18 @@ class ContinuousBatchingServer:
                         spec_now[s] = True
             van_now = active & ~spec_now
 
+            if self.paged:
+                # make this step's write targets physically backed:
+                # vanilla lanes write one row at pos, spec lanes up to
+                # k+1 rows — allocate missing blocks (and CoW shared
+                # ones) BEFORE the jitted step reads the tables
+                for s in np.nonzero(active)[0]:
+                    p = self.scheduler.position(int(s))
+                    hi = p + k if spec_now[s] else p
+                    self.pool = self.cache_ops.ensure_rows(
+                        self.pool, int(s), p, min(hi, self.scfg.max_len - 1)
+                    )
+
             if spec_now.any():
                 self._spec_round(spec_now, k)
 
@@ -687,27 +933,42 @@ class ContinuousBatchingServer:
                 levels = self.arbiter.idx
                 present = sorted(set(int(v) for v in levels[van_now]))
                 self._key, sub = jax.random.split(self._key)
+                tables = self.cache_ops.device_tables() if self.paged else None
                 if len(present) == 1:
                     # hot path: homogeneous level -> ONE fused dispatch
                     key = (van_now.tobytes(), present[0])
                     if key != mask_key:
                         mask_key, mask_dev = key, jnp.asarray(van_now)
-                    (self.pool, self._gen_buf, self._gen_count, self._tok,
-                     self._pos, self._health, hv) = self._tick(
-                        jnp.int32(present[0]), self.params, self._tok, self._pos,
-                        self.pool, mask_dev, sub,
-                        self._gen_buf, self._gen_count, self._health,
-                    )
+                    if self.paged:
+                        (self.pool, self._gen_buf, self._gen_count, self._tok,
+                         self._pos, self._health, hv) = self._tick_p(
+                            jnp.int32(present[0]), self.params, self._tok,
+                            self._pos, self.pool, tables, mask_dev, sub,
+                            self._gen_buf, self._gen_count, self._health,
+                        )
+                    else:
+                        (self.pool, self._gen_buf, self._gen_count, self._tok,
+                         self._pos, self._health, hv) = self._tick(
+                            jnp.int32(present[0]), self.params, self._tok, self._pos,
+                            self.pool, mask_dev, sub,
+                            self._gen_buf, self._gen_count, self._health,
+                        )
                     self.stats["level_passes"] += 1
                 else:
                     # mixed levels: one pool pass per level, mask-merged
                     logits = self._zero_logits
                     for li in present:
                         mask = jnp.asarray(van_now & (levels == li))
-                        logits, self.pool = self._pool_pass(
-                            jnp.int32(li), self.params, self._tok[:, None], self._pos,
-                            self.pool, mask, logits,
-                        )
+                        if self.paged:
+                            logits, self.pool = self._pool_pass_p(
+                                jnp.int32(li), self.params, self._tok[:, None],
+                                self._pos, self.pool, tables, mask, logits,
+                            )
+                        else:
+                            logits, self.pool = self._pool_pass(
+                                jnp.int32(li), self.params, self._tok[:, None], self._pos,
+                                self.pool, mask, logits,
+                            )
                         self.stats["level_passes"] += 1
                     tok, hv = self._finish(logits, sub)
                     active_dev = jnp.asarray(van_now)
