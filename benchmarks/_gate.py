@@ -1,0 +1,72 @@
+"""Shared plumbing for the CI perf-regression gates.
+
+``check_serving_regression.py`` and ``check_speculative_regression.py``
+grew the same baseline-loading / arg-parsing / reporting code
+independently; this module is the one copy.  A gate script builds a
+list of :class:`GateRow` (one per checked invariant) and hands it to
+:func:`emit`, which prints a structured per-key PASS/FAIL table — every
+invariant visible on every run, not just the ones that failed — and
+mirrors the failures to stderr with the gate's prefix so CI logs stay
+greppable.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+
+@dataclasses.dataclass
+class GateRow:
+    """One checked invariant: ``key`` names it, ``value`` / ``bound``
+    show the measured number against its threshold, ``detail`` is the
+    long-form failure explanation (stderr only, and only on FAIL)."""
+
+    key: str
+    passed: bool
+    value: str
+    bound: str
+    detail: str = ""
+
+
+def make_parser(default_baseline: Path) -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--baseline", default=str(default_baseline))
+    ap.add_argument("--tolerance", type=float, default=0.2)
+    ap.add_argument("--absolute", action="store_true",
+                    help="compare raw tokens/s instead of the speedup ratio")
+    return ap
+
+
+def load_current_and_baseline(args) -> Tuple[dict, dict]:
+    """Read both payloads; warn (stderr) when the recorded workloads
+    diverge — the trajectory comparison is then apples-to-oranges and
+    the baseline should be refreshed."""
+    current = json.loads(Path(args.current).read_text())
+    baseline = json.loads(Path(args.baseline).read_text())
+    if current.get("workload") != baseline.get("workload"):
+        print("NOTE: workload changed since baseline was recorded — "
+              "trajectory comparison is apples-to-oranges; refresh the baseline.",
+              file=sys.stderr)
+    return current, baseline
+
+
+def emit(title: str, rows: List[GateRow], fail_prefix: str) -> int:
+    """Print the PASS/FAIL table, mirror failures to stderr, return the
+    exit code (0 = all rows passed)."""
+    key_w = max([len(r.key) for r in rows] + [len("check")])
+    val_w = max([len(r.value) for r in rows] + [len("value")])
+    print(title)
+    print(f"  {'check':<{key_w}}  {'':6}  {'value':>{val_w}}  bound")
+    for r in rows:
+        verdict = "PASS" if r.passed else "FAIL"
+        print(f"  {r.key:<{key_w}}  [{verdict}]  {r.value:>{val_w}}  {r.bound}")
+    failures = [r for r in rows if not r.passed]
+    for r in failures:
+        print(f"{fail_prefix}: {r.detail or r.key}", file=sys.stderr)
+    return 1 if failures else 0

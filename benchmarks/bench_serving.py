@@ -105,20 +105,28 @@ def _static_runner(cfg, params):
 def _continuous_runner(cfg, params):
     """Workload closure for the continuous engine (one persistent
     server — the pool is allocated once; timed passes reuse the warm
-    jit cache exactly like a long-lived serving process would)."""
-    from repro.runtime.serve import ContinuousBatchingServer, ContinuousServerConfig
+    jit cache exactly like a long-lived serving process would).
+
+    Telemetry runs ENABLED here on purpose: the recorded tokens/s is
+    what a production deployment with profiling on would see, the trace
+    becomes the CI artifact, and check_telemetry_overhead.py separately
+    bounds the on-vs-off delta."""
+    from repro.runtime.config import ServingConfig
+    from repro.runtime.serve import ContinuousBatchingServer
+    from repro.runtime.telemetry import TelemetryConfig
 
     srv = ContinuousBatchingServer(
         cfg, params,
-        ContinuousServerConfig(n_slots=N_SLOTS, max_len=MAX_LEN,
-                               default_level=SERVE_LEVEL),
+        ServingConfig(n_slots=N_SLOTS, max_len=MAX_LEN,
+                      default_level=SERVE_LEVEL,
+                      telemetry=TelemetryConfig(enabled=True, trace=True)),
     )
 
     def run():
         fins = srv.serve(_requests(srv))
         return sum(f.n_generated for f in fins.values())
 
-    return run, lambda: dict(srv.stats)
+    return run, srv
 
 
 def _shared_prefix_requests(srv):
@@ -200,10 +208,14 @@ def shared_prefix_json(repeats: int = 3) -> dict:
     }
 
 
-def serving_json(repeats: int = 3) -> dict:
+def serving_json(repeats: int = 3, trace_out=None, metrics_out=None) -> dict:
+    """``trace_out`` / ``metrics_out``: optional paths; when given, the
+    continuous server's Chrome trace and Prometheus exposition are
+    written there after the timed passes (CI uploads both as
+    artifacts)."""
     cfg, params = _build()
     run_s, _ = _static_runner(cfg, params)
-    run_c, stats_c = _continuous_runner(cfg, params)
+    run_c, srv_c = _continuous_runner(cfg, params)
     run_s(); run_c()  # warm: pays every compile on both engines
 
     # INTERLEAVED timed passes: shared-host noise hits both servers in
@@ -219,9 +231,14 @@ def serving_json(repeats: int = 3) -> dict:
         c_walls.append(time.perf_counter() - t0)
     s_wall = sorted(s_walls)[len(s_walls) // 2]
     c_wall = sorted(c_walls)[len(c_walls) // 2]
-    stats = stats_c()
+    stats = dict(srv_c.stats)
     static_tps = s_toks / s_wall
     cont_tps = c_toks / c_wall
+    if trace_out is not None:
+        srv_c.telemetry.write_trace(trace_out)
+    if metrics_out is not None:
+        with open(metrics_out, "w") as f:
+            f.write(srv_c.render_prometheus())
     return {
         "bench": "serving",
         "model": "gemma2_2b-smoke",
@@ -233,6 +250,7 @@ def serving_json(repeats: int = 3) -> dict:
         "continuous_tokens_per_s": cont_tps,
         "speedup": cont_tps / static_tps,
         "continuous_stats": stats,
+        "telemetry": srv_c.metrics_snapshot(),
         "shared_prefix": shared_prefix_json(repeats),
     }
 

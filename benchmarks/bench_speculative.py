@@ -158,6 +158,9 @@ def speculative_json(repeats: int = 5) -> dict:
         "vanilla_f32_tokens_per_s": vanilla_tps,
         "speculative_tokens_per_s": spec_tps,
         "speedup": spec_tps / vanilla_tps,
+        # registry tier is always on: the standalone decoder's weight
+        # cache counts quantizations/hits even without a server around it
+        "telemetry": dec.engine.weight_cache.registry.snapshot(),
     }
 
 

@@ -2,7 +2,8 @@
 
 Compares a fresh ``BENCH_serving.json`` (written by
 ``benchmarks/run.py --json``) against the checked-in baseline and
-FAILS (exit 1) when either serving-perf invariant breaks:
+FAILS (exit 1) when a serving-perf invariant breaks.  Every invariant
+is printed as a PASS/FAIL table row (shared plumbing: ``_gate.py``):
 
 1. **relative**: continuous-batching tokens/s must not LOSE to the
    static lock-step server on the mixed-length workload (with a 5%
@@ -33,36 +34,43 @@ Usage:
 
 from __future__ import annotations
 
-import argparse
-import json
-import sys
 from pathlib import Path
+from typing import List
+
+from _gate import GateRow, emit, load_current_and_baseline, make_parser
 
 DEFAULT_BASELINE = Path(__file__).parent / "baselines" / "BENCH_serving.json"
 
 
-def check(current: dict, baseline: dict, tolerance: float, absolute: bool) -> list:
-    failures = []
+def check(current: dict, baseline: dict, tolerance: float,
+          absolute: bool) -> List[GateRow]:
+    rows = []
 
     cont = current["continuous_tokens_per_s"]
     static = current["static_tokens_per_s"]
     # 5% grace: the invariant is "continuous does not lose", but a
     # zero-tolerance tie-break on shared CI runners is a flake source.
-    if cont < static * 0.95:
-        failures.append(
-            f"continuous batching LOSES to the static server: "
-            f"{cont:.1f} < {static:.1f} tokens/s (speedup {cont / static:.2f}x)"
-        )
+    rows.append(GateRow(
+        key="continuous_vs_static",
+        passed=cont >= static * 0.95,
+        value=f"{cont / static:.2f}x",
+        bound=">= 0.95x static",
+        detail=f"continuous batching LOSES to the static server: "
+               f"{cont:.1f} < {static:.1f} tokens/s (speedup {cont / static:.2f}x)",
+    ))
 
     if absolute:
         base, cur, what = baseline["continuous_tokens_per_s"], cont, "continuous tokens/s"
     else:
         base, cur, what = baseline["speedup"], current["speedup"], "continuous/static speedup"
-    if cur < base * (1.0 - tolerance):
-        failures.append(
-            f"{what} regressed >{tolerance:.0%} vs baseline: "
-            f"{cur:.3f} < {base:.3f} * {1 - tolerance:.2f}"
-        )
+    rows.append(GateRow(
+        key="trajectory" + ("_absolute" if absolute else ""),
+        passed=cur >= base * (1.0 - tolerance),
+        value=f"{cur:.3f}",
+        bound=f">= {base:.3f} * {1 - tolerance:.2f}",
+        detail=f"{what} regressed >{tolerance:.0%} vs baseline: "
+               f"{cur:.3f} < {base:.3f} * {1 - tolerance:.2f}",
+    ))
 
     # 3. shared-prefix workload: the paged pool (prefix sharing on) must
     #    not lose to the contiguous engine on the long-prompt workload it
@@ -70,48 +78,43 @@ def check(current: dict, baseline: dict, tolerance: float, absolute: bool) -> li
     #    must hold its trajectory vs the baseline.
     sp = current.get("shared_prefix")
     if sp is not None:
-        if sp["paged_tokens_per_s"] < sp["contiguous_tokens_per_s"] * 0.95:
-            failures.append(
-                f"paged+prefix-sharing LOSES to contiguous on the "
-                f"shared-prefix workload: {sp['paged_tokens_per_s']:.1f} < "
-                f"{sp['contiguous_tokens_per_s']:.1f} tokens/s "
-                f"(speedup {sp['paged_speedup']:.2f}x)"
-            )
-        if sp["prefix_hits"] == 0:
-            failures.append(
-                "prefix cache recorded ZERO hits on the shared-prefix "
-                "workload — sharing is not engaging"
-            )
+        rows.append(GateRow(
+            key="shared_prefix_paged_vs_contiguous",
+            passed=sp["paged_tokens_per_s"] >= sp["contiguous_tokens_per_s"] * 0.95,
+            value=f"{sp['paged_speedup']:.2f}x",
+            bound=">= 0.95x contiguous",
+            detail=f"paged+prefix-sharing LOSES to contiguous on the "
+                   f"shared-prefix workload: {sp['paged_tokens_per_s']:.1f} < "
+                   f"{sp['contiguous_tokens_per_s']:.1f} tokens/s "
+                   f"(speedup {sp['paged_speedup']:.2f}x)",
+        ))
+        rows.append(GateRow(
+            key="shared_prefix_hits",
+            passed=sp["prefix_hits"] > 0,
+            value=str(sp["prefix_hits"]),
+            bound="> 0",
+            detail="prefix cache recorded ZERO hits on the shared-prefix "
+                   "workload — sharing is not engaging",
+        ))
         base_sp = baseline.get("shared_prefix")
-        if base_sp is not None and sp["paged_speedup"] < \
-                base_sp["paged_speedup"] * (1.0 - tolerance):
-            failures.append(
-                f"paged/contiguous shared-prefix speedup regressed "
-                f">{tolerance:.0%} vs baseline: {sp['paged_speedup']:.3f} < "
-                f"{base_sp['paged_speedup']:.3f} * {1 - tolerance:.2f}"
-            )
-    return failures
+        if base_sp is not None:
+            rows.append(GateRow(
+                key="shared_prefix_trajectory",
+                passed=sp["paged_speedup"] >= base_sp["paged_speedup"] * (1.0 - tolerance),
+                value=f"{sp['paged_speedup']:.3f}",
+                bound=f">= {base_sp['paged_speedup']:.3f} * {1 - tolerance:.2f}",
+                detail=f"paged/contiguous shared-prefix speedup regressed "
+                       f">{tolerance:.0%} vs baseline: {sp['paged_speedup']:.3f} < "
+                       f"{base_sp['paged_speedup']:.3f} * {1 - tolerance:.2f}",
+            ))
+    return rows
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--current", required=True)
-    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
-    ap.add_argument("--tolerance", type=float, default=0.2)
-    ap.add_argument("--absolute", action="store_true",
-                    help="compare raw tokens/s instead of the speedup ratio")
-    args = ap.parse_args(argv)
+    args = make_parser(DEFAULT_BASELINE).parse_args(argv)
+    current, baseline = load_current_and_baseline(args)
 
-    current = json.loads(Path(args.current).read_text())
-    baseline = json.loads(Path(args.baseline).read_text())
-
-    if current.get("workload") != baseline.get("workload"):
-        print("NOTE: workload changed since baseline was recorded — "
-              "trajectory comparison is apples-to-oranges; refresh the baseline.",
-              file=sys.stderr)
-
-    failures = check(current, baseline, args.tolerance, args.absolute)
-    print(
+    title = (
         f"serving perf: static={current['static_tokens_per_s']:.1f} tok/s, "
         f"continuous={current['continuous_tokens_per_s']:.1f} tok/s "
         f"(speedup {current['speedup']:.2f}x; baseline {baseline['speedup']:.2f}x)"
@@ -119,16 +122,15 @@ def main(argv=None) -> int:
     sp = current.get("shared_prefix")
     if sp is not None:
         mem = sp["memory"]
-        print(
-            f"shared-prefix: contiguous={sp['contiguous_tokens_per_s']:.1f} "
+        title += (
+            f"\nshared-prefix: contiguous={sp['contiguous_tokens_per_s']:.1f} "
             f"tok/s, paged={sp['paged_tokens_per_s']:.1f} tok/s "
             f"(speedup {sp['paged_speedup']:.2f}x, hits {sp['prefix_hits']}, "
             f"pages {mem['high_water_pages']}/{mem['contiguous_pages_equiv']} "
             f"= {mem['capacity_ratio']:.2f} of contiguous)"
         )
-    for f in failures:
-        print(f"SERVING PERF FAIL: {f}", file=sys.stderr)
-    return 1 if failures else 0
+    rows = check(current, baseline, args.tolerance, args.absolute)
+    return emit(title, rows, "SERVING PERF FAIL")
 
 
 if __name__ == "__main__":

@@ -2,14 +2,17 @@
 
 Compares a fresh ``BENCH_speculative.json`` (written by
 ``benchmarks/run.py --json``) against the checked-in baseline and
-FAILS (exit 1) when either invariant breaks:
+FAILS (exit 1) when an invariant breaks.  Every invariant is printed
+as a PASS/FAIL table row (shared plumbing: ``_gate.py``):
 
 1. **relative**: speculative tokens/s must BEAT vanilla f32 greedy
    decode on the smoke workload (with a 5% tie-break grace for
    shared-runner noise).  If drafting + the batched verify cannot
    out-run one-f32-step-per-token, the subsystem is dead weight — this
    is the machine-independent relation that gates unconditionally.
-2. **trajectory**: the speculative/vanilla SPEEDUP ratio must not
+2. **exactness**: the payload must attest token exactness (speculative
+   output == vanilla f32 greedy, bit-for-bit).
+3. **trajectory**: the speculative/vanilla SPEEDUP ratio must not
    regress more than ``--tolerance`` (default 20%) against the
    checked-in baseline (absolute tokens/s are host-dependent; the
    ratio is stable across runner generations).  Pass ``--absolute``
@@ -29,28 +32,37 @@ Usage:
 
 from __future__ import annotations
 
-import argparse
-import json
-import sys
 from pathlib import Path
+from typing import List
+
+from _gate import GateRow, emit, load_current_and_baseline, make_parser
 
 DEFAULT_BASELINE = Path(__file__).parent / "baselines" / "BENCH_speculative.json"
 
 
-def check(current: dict, baseline: dict, tolerance: float, absolute: bool) -> list:
-    failures = []
+def check(current: dict, baseline: dict, tolerance: float,
+          absolute: bool) -> List[GateRow]:
+    rows = []
 
     spec = current["speculative_tokens_per_s"]
     vanilla = current["vanilla_f32_tokens_per_s"]
-    if spec < vanilla * 0.95:
-        failures.append(
-            f"speculative decode LOSES to vanilla f32: "
-            f"{spec:.1f} < {vanilla:.1f} tokens/s (speedup {spec / vanilla:.2f}x, "
-            f"acceptance {current.get('acceptance_rate', float('nan')):.3f})"
-        )
+    rows.append(GateRow(
+        key="speculative_vs_vanilla",
+        passed=spec >= vanilla * 0.95,
+        value=f"{spec / vanilla:.2f}x",
+        bound=">= 0.95x vanilla",
+        detail=f"speculative decode LOSES to vanilla f32: "
+               f"{spec:.1f} < {vanilla:.1f} tokens/s (speedup {spec / vanilla:.2f}x, "
+               f"acceptance {current.get('acceptance_rate', float('nan')):.3f})",
+    ))
 
-    if not current.get("exact", False):
-        failures.append("benchmark payload does not attest token exactness")
+    rows.append(GateRow(
+        key="token_exactness",
+        passed=bool(current.get("exact", False)),
+        value=str(current.get("exact", False)),
+        bound="True",
+        detail="benchmark payload does not attest token exactness",
+    ))
 
     if absolute:
         base, cur, what = (baseline["speculative_tokens_per_s"], spec,
@@ -58,42 +70,30 @@ def check(current: dict, baseline: dict, tolerance: float, absolute: bool) -> li
     else:
         base, cur, what = baseline["speedup"], current["speedup"], \
             "speculative/vanilla speedup"
-    if cur < base * (1.0 - tolerance):
-        failures.append(
-            f"{what} regressed >{tolerance:.0%} vs baseline: "
-            f"{cur:.3f} < {base:.3f} * {1 - tolerance:.2f}"
-        )
-    return failures
+    rows.append(GateRow(
+        key="trajectory" + ("_absolute" if absolute else ""),
+        passed=cur >= base * (1.0 - tolerance),
+        value=f"{cur:.3f}",
+        bound=f">= {base:.3f} * {1 - tolerance:.2f}",
+        detail=f"{what} regressed >{tolerance:.0%} vs baseline: "
+               f"{cur:.3f} < {base:.3f} * {1 - tolerance:.2f}",
+    ))
+    return rows
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--current", required=True)
-    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
-    ap.add_argument("--tolerance", type=float, default=0.2)
-    ap.add_argument("--absolute", action="store_true",
-                    help="compare raw tokens/s instead of the speedup ratio")
-    args = ap.parse_args(argv)
+    args = make_parser(DEFAULT_BASELINE).parse_args(argv)
+    current, baseline = load_current_and_baseline(args)
 
-    current = json.loads(Path(args.current).read_text())
-    baseline = json.loads(Path(args.baseline).read_text())
-
-    if current.get("workload") != baseline.get("workload"):
-        print("NOTE: workload changed since baseline was recorded — "
-              "trajectory comparison is apples-to-oranges; refresh the baseline.",
-              file=sys.stderr)
-
-    failures = check(current, baseline, args.tolerance, args.absolute)
-    print(
+    title = (
         f"speculative perf: vanilla_f32={current['vanilla_f32_tokens_per_s']:.1f} tok/s, "
         f"speculative={current['speculative_tokens_per_s']:.1f} tok/s "
         f"(speedup {current['speedup']:.2f}x, acceptance "
         f"{current.get('acceptance_rate', float('nan')):.3f}; "
         f"baseline {baseline['speedup']:.2f}x)"
     )
-    for f in failures:
-        print(f"SPECULATIVE PERF FAIL: {f}", file=sys.stderr)
-    return 1 if failures else 0
+    rows = check(current, baseline, args.tolerance, args.absolute)
+    return emit(title, rows, "SPECULATIVE PERF FAIL")
 
 
 if __name__ == "__main__":

@@ -12,7 +12,10 @@ benchmarks/check_serving_regression.py) AND
 ``BENCH_speculative.json`` (ladder-speculative vs vanilla f32 greedy
 tokens/s — gated in CI by benchmarks/check_speculative_regression.py)
 next to the CSV output, so successive PRs accumulate comparable
-numbers.
+numbers.  The serving run also drops ``trace.json`` (Chrome
+``trace_event`` profile of the continuous engine — open in Perfetto)
+and ``metrics.prom`` (Prometheus text exposition) beside the JSONs;
+CI uploads all of them as artifacts (see docs/observability.md).
 """
 
 import argparse
@@ -58,7 +61,13 @@ def main() -> None:
         out_path = args.json or "BENCH_fused_mlp.json"
         Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
         print(f"wrote {out_path}", file=sys.stderr)
-        serving_payload = bench_serving.serving_json()
+        out_dir = Path(out_path).parent
+        serving_payload = bench_serving.serving_json(
+            trace_out=str(out_dir / "trace.json"),
+            metrics_out=str(out_dir / "metrics.prom"),
+        )
+        print(f"wrote {out_dir / 'trace.json'} and {out_dir / 'metrics.prom'}",
+              file=sys.stderr)
         serving_path = Path(out_path).parent / "BENCH_serving.json"
         serving_path.write_text(json.dumps(serving_payload, indent=2) + "\n")
         print(f"wrote {serving_path}", file=sys.stderr)

@@ -214,11 +214,17 @@ class SlotArbiter:
     the updated per-slot level indices.
     """
 
-    def __init__(self, n_slots: int, config: SlotArbiterConfig = SlotArbiterConfig()):
+    def __init__(self, n_slots: int, config: SlotArbiterConfig = SlotArbiterConfig(),
+                 on_switch=None):
         if not 0 <= config.start_idx < config.n_levels:
             raise ValueError(f"start_idx {config.start_idx} outside ladder of {config.n_levels}")
         self.config = config
         self.n_slots = n_slots
+        #: optional observer ``(step, slot, old_idx, new_idx, reason) ->
+        #: None`` called on every switch — the serving telemetry's
+        #: escalation counter/trace hook (kept as a plain callback so
+        #: core/ stays import-independent of the telemetry layer).
+        self.on_switch = on_switch
         self.idx = np.full((n_slots,), config.start_idx, np.int32)
         self.floor = np.full((n_slots,), config.start_idx, np.int32)
         self._stable = np.zeros((n_slots,), np.int32)
@@ -300,5 +306,7 @@ class SlotArbiter:
                       else "acceptance" if esc_acc[s]
                       else "stable")
             self.switches.append((step, int(s), int(self.idx[s]), int(new_idx[s]), reason))
+            if self.on_switch is not None:
+                self.on_switch(step, int(s), int(self.idx[s]), int(new_idx[s]), reason)
         self.idx = new_idx
         return self.idx

@@ -142,15 +142,56 @@ class QuantizedWeightCache:
       :meth:`invalidate` in the quiesce -> swap protocol;
     * ``quantize_calls`` / ``hits`` are the counting hook the tests use
       to assert the decode loop performs ZERO weight quantizations.
+      They are registry-backed metrics (``weight_quantize_total`` /
+      ``weight_cache_hits_total`` — see
+      :mod:`repro.runtime.telemetry`); the attributes remain as
+      read-only delegating aliases.  A server re-homes them onto its
+      own registry via :meth:`use_registry` so they show up in
+      ``metrics_snapshot()`` / the Prometheus exposition.
     """
 
-    def __init__(self, bits: int = 8):
+    def __init__(self, bits: int = 8, registry=None):
+        from repro.runtime.telemetry import MetricsRegistry
+
         self.bits = bits
         self._store: dict = {}
         self._specs: dict = {}  # key -> (shape, dtype, axis) sanity record
         self._lock = threading.RLock()
-        self.quantize_calls = 0
-        self.hits = 0
+        self._bind(registry if registry is not None else MetricsRegistry())
+
+    def _bind(self, registry) -> None:
+        self._registry = registry
+        self._m_quantize = registry.counter(
+            "weight_quantize_total", "weight quantizations performed (cache misses)"
+        )
+        self._m_hits = registry.counter(
+            "weight_cache_hits_total", "pre-quantized weight reuses (cache hits)"
+        )
+
+    def use_registry(self, registry) -> None:
+        """Re-home the counting hooks onto a shared registry (the
+        serving telemetry's), carrying the current counts over."""
+        with self._lock:
+            q, h = self.quantize_calls, self.hits
+            self._bind(registry)
+            if q:
+                self._m_quantize.inc(q)
+            if h:
+                self._m_hits.inc(h)
+
+    @property
+    def registry(self):
+        return self._registry
+
+    @property
+    def quantize_calls(self) -> int:
+        """Delegating alias for ``weight_quantize_total``."""
+        return int(self._m_quantize.value())
+
+    @property
+    def hits(self) -> int:
+        """Delegating alias for ``weight_cache_hits_total``."""
+        return int(self._m_hits.value())
 
     def get(self, name: str, w, *, level: str = "q16_16", axis: Axis = None) -> QTensor:
         """The quantized form of ``w``, computed at most once per
@@ -175,11 +216,11 @@ class QuantizedWeightCache:
                         f"{self._specs[key]}, requested {spec} — different "
                         f"param under the same name? invalidate first."
                     )
-                self.hits += 1
+                self._m_hits.inc()
                 return hit
         qt = quantize_pow2(w, bits=self.bits, axis=axis)
         with self._lock:
-            self.quantize_calls += 1
+            self._m_quantize.inc()
             self._store.setdefault(key, qt)
             self._specs[key] = spec
             return self._store[key]

@@ -4,20 +4,28 @@ Smoke (CPU):
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2_2b --smoke
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2_2b --continuous
     PYTHONPATH=src python -m repro.launch.serve --arch deepseek_7b \
-        --continuous --paged --prefix-sharing
+        --continuous --paged --prefix-sharing \
+        --metrics-out metrics.prom --trace-out trace.json
 
 ``--continuous`` runs the continuous-batching engine (per-request
 precision via ``--levels``) on a mixed-length/mixed-budget workload;
 the default runs the static lock-step ``BatchedServer``.  Both routes
-build ONE :class:`~repro.runtime.config.ServingConfig`.
-``--continuous --speculative`` serves every request through
-ladder-speculative decoding (draft at ``--draft-level``, verify at f32
-— output identical to vanilla f32 greedy; watch ``spec_rounds`` /
-``spec_accepted`` in the printed stats).  ``--paged`` switches the
-cache pool to fixed-size pages + block tables with chunked prefill
-(``--prefill-chunk`` tokens per fixed-shape segment); add
+build ONE :class:`~repro.runtime.config.ServingConfig` — assembled by
+:func:`serving_config_from_args`, which is what
+tests/test_serve_cli.py pins: every cache/telemetry flag must round-trip
+into a validated config.  ``--continuous --speculative`` serves every
+request through ladder-speculative decoding (draft at ``--draft-level``,
+verify at f32 — output identical to vanilla f32 greedy; watch
+``spec_rounds`` / ``spec_accepted`` in the printed stats).  ``--paged``
+switches the cache pool to fixed-size pages + block tables with chunked
+prefill (``--prefill-chunk`` tokens per fixed-shape segment); add
 ``--prefix-sharing`` to share full prefix pages between requests
 (full-context attention models only).
+
+Telemetry outputs (see docs/observability.md): ``--metrics-out FILE``
+writes the Prometheus text exposition after serving; ``--trace-out
+FILE`` writes the Chrome ``trace_event`` JSON (open in Perfetto).
+Either flag turns the profiler tier on for the run.
 """
 
 from __future__ import annotations
@@ -26,9 +34,11 @@ import argparse
 
 import jax
 
+MAX_LEN = 128
 
-def main():
-    ap = argparse.ArgumentParser()
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="repro.launch.serve")
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--mode", default="precise", choices=["precise", "fast"])
@@ -59,7 +69,52 @@ def main():
     ap.add_argument("--n-pages", type=int, default=None,
                     help="total pages in the full-length pool (default: sized "
                          "to the slot count)")
-    args = ap.parse_args()
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the Prometheus metrics exposition here after "
+                         "serving (enables telemetry)")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write the Chrome trace_event JSON here after serving "
+                         "(enables telemetry + tracing; open in Perfetto)")
+    return ap
+
+
+def serving_config_from_args(args):
+    """The one flags -> :class:`ServingConfig` mapping (validated by
+    the config's own ``__post_init__``)."""
+    from repro.runtime.config import ServingConfig
+    from repro.runtime.speculative import SpeculativeConfig
+    from repro.runtime.telemetry import TelemetryConfig
+
+    spec = (
+        SpeculativeConfig(k=args.spec_k, draft_level=args.draft_level,
+                          max_len=MAX_LEN)
+        if args.speculative else None
+    )
+    telemetry = TelemetryConfig(
+        enabled=bool(args.metrics_out or args.trace_out),
+        trace=bool(args.trace_out),
+    )
+    return ServingConfig(
+        n_slots=args.slots, max_len=MAX_LEN, speculative=spec,
+        cache="paged" if args.paged else "contiguous",
+        page_size=args.page_size, prefill_chunk=args.prefill_chunk,
+        prefix_sharing=args.prefix_sharing, n_pages=args.n_pages,
+        telemetry=telemetry,
+    )
+
+
+def _write_outputs(srv, args) -> None:
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(srv.render_prometheus())
+        print(f"metrics -> {args.metrics_out}")
+    if args.trace_out:
+        srv.telemetry.write_trace(args.trace_out)
+        print(f"trace   -> {args.trace_out}")
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     from repro.configs import smoke
     from repro.core.precision import Mode
@@ -73,22 +128,7 @@ def main():
     prompts = [[1, 2, 3, 4, 5], [10, 11, 12], [7, 7, 7, 7], [3, 1, 4, 1, 5, 9]]
 
     if args.continuous:
-        from repro.runtime.speculative import SpeculativeConfig
-
-        spec = (
-            SpeculativeConfig(k=args.spec_k, draft_level=args.draft_level,
-                              max_len=128)
-            if args.speculative else None
-        )
-        srv = ContinuousBatchingServer(
-            cfg, params,
-            ServingConfig(
-                n_slots=args.slots, max_len=128, speculative=spec,
-                cache="paged" if args.paged else "contiguous",
-                page_size=args.page_size, prefill_chunk=args.prefill_chunk,
-                prefix_sharing=args.prefix_sharing, n_pages=args.n_pages,
-            ),
-        )
+        srv = ContinuousBatchingServer(cfg, params, serving_config_from_args(args))
         levels = args.levels.split(",") if args.levels else [None]
         reqs = [
             Request(rid=srv.next_rid(), prompt=p, max_new=args.max_new + 4 * (i % 2),
@@ -103,15 +143,25 @@ def main():
         print(f"stats: {srv.stats}")
         if args.paged:
             print(f"pages: {srv.cache_ops.report()}")
+        _write_outputs(srv, args)
         return
+
+    from repro.runtime.telemetry import TelemetryConfig
 
     srv = BatchedServer(
         cfg, params,
-        ServingConfig(n_slots=4, max_len=128, max_new=args.max_new,
-                      default_level=Mode(args.mode)),
+        ServingConfig(n_slots=4, max_len=MAX_LEN, max_new=args.max_new,
+                      default_level=Mode(args.mode),
+                      telemetry=TelemetryConfig(
+                          enabled=bool(args.metrics_out or args.trace_out),
+                          trace=bool(args.trace_out))),
     )
     for i, seq in enumerate(srv.generate(prompts)):
         print(f"req{i}: {seq}")
+    if args.metrics_out or args.trace_out:
+        print("note: --metrics-out/--trace-out apply to --continuous; "
+              "static-server metrics are limited to the weight cache")
+        _write_outputs(srv, args)
 
 
 if __name__ == "__main__":

@@ -316,7 +316,8 @@ class PagedCachePool:
 
     def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int,
                  page_size: int, dtype=jnp.float32, *,
-                 n_pages: Optional[int] = None, prefix_sharing: bool = False):
+                 n_pages: Optional[int] = None, prefix_sharing: bool = False,
+                 registry=None):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
@@ -370,6 +371,33 @@ class PagedCachePool:
         self.prefix: Optional[PrefixCache] = None
         if prefix_sharing:
             self.prefix = PrefixCache(self.groups[f"L{max_len}"]["alloc"])
+
+        # pool telemetry: shares the server's registry when given, keeps
+        # a private one otherwise (counting is always on — see
+        # repro.runtime.telemetry's overhead contract).  Gauges are
+        # refreshed on demand by :meth:`scrape_gauges`, not per alloc.
+        if registry is None:
+            from repro.runtime.telemetry import MetricsRegistry
+            registry = MetricsRegistry()
+        self._registry = registry
+        self._m_allocs = registry.counter(
+            "page_allocs_total", "pages handed out by the free-list allocator",
+            labelnames=("group",))
+        self._m_cow = registry.counter(
+            "cow_copies_total", "copy-on-write page duplications")
+        self._m_prefix_evictions = registry.counter(
+            "prefix_evictions_total",
+            "prefix-cache LRU entries released under page pressure")
+        self._m_pages_free = registry.gauge(
+            "pages_free", "free pages per group", labelnames=("group",))
+        self._m_pages_live = registry.gauge(
+            "pages_live", "resident (refcounted) pages per group",
+            labelnames=("group",))
+        self._m_pages_hw = registry.gauge(
+            "pages_high_water", "max pages ever live per group",
+            labelnames=("group",))
+        self._m_prefix_entries = registry.gauge(
+            "prefix_entries", "prefix-cache entries resident")
 
         # leaf templates from the contiguous initializer: the paged pool
         # stores EXACTLY the same leaves, page-major
@@ -585,15 +613,25 @@ class PagedCachePool:
 
     # -- host lifecycle ------------------------------------------------------
 
+    def _evict_prefix(self) -> int:
+        """Release one LRU prefix entry (counted); returns pages freed."""
+        had = len(self.prefix)
+        freed = self.prefix.evict_lru()
+        if len(self.prefix) < had:
+            self._m_prefix_evictions.inc()
+        return freed
+
     def _alloc_page(self, gk: str) -> int:
         """Allocate one page, evicting LRU prefix entries under
         pressure; raises MemoryError when the pool is truly full."""
         g = self.groups[gk]
         while True:
             try:
-                return g["alloc"].alloc()
+                pid = g["alloc"].alloc()
+                self._m_allocs.inc(group=gk)
+                return pid
             except MemoryError:
-                if self.prefix is None or not self.prefix.evict_lru():
+                if self.prefix is None or not self._evict_prefix():
                     raise MemoryError(
                         f"page pool {gk} exhausted "
                         f"({g['alloc'].n_pages} pages, none evictable); "
@@ -631,6 +669,7 @@ class PagedCachePool:
         else:
             state = self._copy_page[gk](state, jnp.int32(pid), jnp.int32(dst))
             g["alloc"].decref(pid)
+            self._m_cow.inc()
         g["table"][slot, block] = dst
         self._dirty = True
         return state
@@ -727,7 +766,7 @@ class PagedCachePool:
                 need = plen // self.page_size + 1
             free = g["alloc"].n_free
             if free < need and self.prefix is not None:
-                while free < need and self.prefix.evict_lru() >= 0 and len(self.prefix):
+                while free < need and self._evict_prefix() >= 0 and len(self.prefix):
                     free = g["alloc"].n_free
                 free = g["alloc"].n_free
             if free < need:
@@ -770,6 +809,19 @@ class PagedCachePool:
         return self.write(state, snap, slot)
 
     # -- reporting -----------------------------------------------------------
+
+    def scrape_gauges(self) -> None:
+        """Refresh the occupancy gauges (``pages_free`` / ``pages_live``
+        / ``pages_high_water`` per group, ``prefix_entries``) from the
+        allocators.  Called at snapshot/export time rather than per
+        alloc — gauges are point-in-time reads, not event counts."""
+        for gk, g in self.groups.items():
+            a = g["alloc"]
+            self._m_pages_free.set(a.n_free, group=gk)
+            self._m_pages_live.set(a.n_pages - 1 - a.n_free, group=gk)
+            self._m_pages_hw.set(a.high_water, group=gk)
+        if self.prefix is not None:
+            self._m_prefix_entries.set(len(self.prefix))
 
     def report(self) -> dict:
         """Capacity numbers for the serving benchmark: pages resident /

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.core.arbiter import SlotArbiterConfig
 from repro.runtime.speculative import SpeculativeConfig
+from repro.runtime.telemetry import TelemetryConfig
 
 __all__ = ["ServingConfig", "SERVE_STEP_LEVELS", "SERVE_CACHE_DTYPE"]
 
@@ -110,6 +111,13 @@ class ServingConfig:
     #: total pages in the full-length page pool (incl. the reserved
     #: zero page); None = a validated default.
     n_pages: Optional[int] = None
+    #: runtime telemetry (see repro.runtime.telemetry).  The metrics
+    #: REGISTRY is always on (plain host counters, same cost as the
+    #: counting hooks it replaced); ``telemetry.enabled`` additionally
+    #: turns on the span tracer / tick profiler, and
+    #: ``telemetry.sync_device`` opts into device barriers for honest
+    #: phase timings (changes performance, never tokens).
+    telemetry: TelemetryConfig = dataclasses.field(default_factory=TelemetryConfig)
 
     def __post_init__(self):
         if self.n_slots < 1:

@@ -91,7 +91,7 @@ class _SlotEntry:
 
 class ContinuousScheduler:
     def __init__(self, n_slots: int, max_len: int, eos_id: Optional[int] = None,
-                 levels: Optional[Tuple[str, ...]] = None):
+                 levels: Optional[Tuple[str, ...]] = None, registry=None):
         if n_slots < 1:
             raise ValueError("need at least one slot")
         self.n_slots = n_slots
@@ -102,6 +102,18 @@ class ContinuousScheduler:
         self.slots: List[Optional[_SlotEntry]] = [None] * n_slots
         self.finished: Dict[int, FinishedRequest] = {}
         self._submitted: set = set()
+        # queue/admission metrics: on the server's registry when given,
+        # a private one otherwise (counting is always on — see
+        # repro.runtime.telemetry's overhead contract)
+        if registry is None:
+            from repro.runtime.telemetry import MetricsRegistry
+            registry = MetricsRegistry()
+        self._m_queue = registry.gauge(
+            "queue_depth", "requests pending admission")
+        self._m_blocked = registry.counter(
+            "admission_blocked_total",
+            "admit() calls that left the head request pending",
+            labelnames=("reason",))
 
     # -- submission ---------------------------------------------------------
 
@@ -126,6 +138,7 @@ class ContinuousScheduler:
         self.validate(req)
         self._submitted.add(req.rid)
         self.pending.append(req)
+        self._m_queue.set(len(self.pending))
 
     def pop_finished(self, rid: int) -> FinishedRequest:
         """Hand a finished request's result out and RELEASE the rid:
@@ -169,19 +182,34 @@ class ContinuousScheduler:
         allocate before calling again: the predicate reads free
         capacity at call time, so approving several requests in one
         batch would check them all against the same un-decremented
-        free-page count and over-commit the pool."""
+        free-page count and over-commit the pool.
+
+        A call that leaves the head request pending records WHY in the
+        ``admission_blocked_total{reason=...}`` counter: ``capacity``
+        (the predicate rejected it) or ``slots_full`` (no free slot) —
+        a ``limit`` cut is not blockage (the caller loops)."""
         out = []
+        capacity_blocked = False
+        limit_cut = False
         for i in range(self.n_slots):
             if not self.pending:
                 break
             if limit is not None and len(out) >= limit:
+                limit_cut = True
                 break
             if self.slots[i] is None:
                 if can_admit is not None and not can_admit(self.pending[0]):
+                    capacity_blocked = True
                     break
                 req = self.pending.popleft()
                 self.slots[i] = _SlotEntry(req)
                 out.append((i, req))
+        if self.pending and not limit_cut:
+            if capacity_blocked:
+                self._m_blocked.inc(reason="capacity")
+            elif all(e is not None for e in self.slots):
+                self._m_blocked.inc(reason="slots_full")
+        self._m_queue.set(len(self.pending))
         return out
 
     # -- per-token bookkeeping ---------------------------------------------

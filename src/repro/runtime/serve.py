@@ -62,6 +62,7 @@ once per request at eviction; health syncs on a configurable cadence).
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -88,6 +89,7 @@ from repro.runtime.config import (
 )
 from repro.runtime.scheduler import ContinuousScheduler, FinishedRequest, Request
 from repro.runtime.speculative import SPEC_DRAFT_LEVELS, register_spec_steps
+from repro.runtime.telemetry import Telemetry
 
 __all__ = [
     "ServingConfig",
@@ -147,7 +149,11 @@ class BatchedServer:
             )
         self.cfg = cfg
         self.scfg = scfg
+        self.telemetry = Telemetry(scfg.telemetry)
         self.engine = MathEngine(scfg.default_level)
+        # the engine's weight-cache counting hooks report through this
+        # server's registry (shows up in metrics_snapshot())
+        self.engine.weight_cache.use_registry(self.telemetry.registry)
         # quantize-once: every FAST weight gets its int8 payload here,
         # keyed in the engine's cache; the original float leaves stay
         # (precise path + re-attachment after invalidate_weights).
@@ -155,6 +161,13 @@ class BatchedServer:
             params, self.engine.weight_cache, level="q16_16"
         )
         self._build()
+
+    def metrics_snapshot(self) -> dict:
+        """Nested-dict snapshot of every registered metric."""
+        return self.telemetry.registry.snapshot()
+
+    def render_prometheus(self) -> str:
+        return self.telemetry.render_prometheus()
 
     def _build(self):
         cfg = self.cfg
@@ -311,7 +324,14 @@ class ContinuousBatchingServer:
             )
         if scfg.arbiter.n_levels != len(self.level_names):
             raise ValueError("arbiter ladder size must match SERVE_STEP_LEVELS")
+        # telemetry: ONE registry shared by every subsystem (scheduler,
+        # page pool, weight cache, arbiter hooks) so metrics_snapshot()
+        # is the whole server in one dict.  The registry tier is always
+        # on; spans/timestamps only when scfg.telemetry.enabled.
+        self.telemetry = Telemetry(scfg.telemetry)
+        self._declare_metrics(self.telemetry.registry)
         self.engine = MathEngine(scfg.default_level)
+        self.engine.weight_cache.use_registry(self.telemetry.registry)
         self.params = attach_quantized_weights(
             params, self.engine.weight_cache, level="q16_16"
         )
@@ -327,6 +347,7 @@ class ContinuousBatchingServer:
                 cfg, scfg.n_slots, scfg.max_len, scfg.page_size,
                 dtype=SERVE_CACHE_DTYPE, n_pages=scfg.n_pages,
                 prefix_sharing=scfg.prefix_sharing,
+                registry=self.telemetry.registry,
             )
         else:
             self.cache_ops = ContiguousCacheOps(
@@ -342,9 +363,11 @@ class ContinuousBatchingServer:
         self._gen_count = jnp.zeros((scfg.n_slots,), jnp.int32)
         self._health = jnp.tile(jnp.asarray([1.0, 0.0], jnp.float32), (scfg.n_slots, 1))
         self.scheduler = ContinuousScheduler(
-            scfg.n_slots, scfg.max_len, scfg.eos_id, levels=self.level_names
+            scfg.n_slots, scfg.max_len, scfg.eos_id, levels=self.level_names,
+            registry=self.telemetry.registry,
         )
         self.arbiter = SlotArbiter(scfg.n_slots, scfg.arbiter)
+        self.arbiter.on_switch = self._make_switch_hook("serve", self.level_names)
         # speculative mode: a SEPARATE per-slot arbiter whose rungs index
         # the DRAFT ladder (SPEC_DRAFT_LEVELS) — acceptance-rate driven,
         # while self.arbiter keeps governing vanilla slots' serve levels.
@@ -359,19 +382,127 @@ class ContinuousBatchingServer:
                     start_idx=draft_names.index(scfg.speculative.draft_level),
                 ),
             )
+            self.draft_arbiter.on_switch = self._make_switch_hook(
+                "draft", draft_names
+            )
         self._key = jax.random.PRNGKey(scfg.seed)
         self._step = 0
         self._rid_counter = 0
-        self.stats = {
-            "decode_steps": 0, "level_passes": 0, "prefills": 0,
-            "spec_rounds": 0, "spec_drafted": 0, "spec_accepted": 0,
-            "prefill_chunks": 0, "prefix_hits": 0, "prefix_tokens_reused": 0,
-        }
-        #: trace-time counter for the fixed-shape chunk-prefill step —
-        #: pinned by the zero-retrace test: after warmup it must not
-        #: move, whatever mix of prompt lengths is admitted.
-        self._chunk_traces = 0
+        self._req_t0: Dict[int, float] = {}  # slot -> admission wall time
+        if self.telemetry.on:
+            self.telemetry.thread_name(0, "engine")
+            for s in range(scfg.n_slots):
+                self.telemetry.thread_name(s + 1, f"slot{s}")
         self._build()
+
+    # -- telemetry ----------------------------------------------------------
+
+    def _declare_metrics(self, reg) -> None:
+        """Every serving metric family, registered up front (a metric
+        that never fires still appears in the snapshot at 0 — absence
+        means a typo, not an idle path).  See docs/observability.md."""
+        tb = self.scfg.telemetry.tick_buckets
+        self._m_decode_ticks = reg.counter(
+            "decode_ticks_total", "pool decode steps executed")
+        self._m_level_passes = reg.counter(
+            "level_passes_total", "compiled pool passes per ladder level",
+            labelnames=("level",))
+        self._m_prefills = reg.counter(
+            "prefills_total", "request prefills (admissions)")
+        self._m_prefill_chunks = reg.counter(
+            "prefill_chunks_total", "fixed-shape chunk-prefill dispatches")
+        self._m_prefix_hits = reg.counter(
+            "prefix_cache_hits_total", "admissions that reused a shared prefix")
+        self._m_prefix_reused = reg.counter(
+            "prefix_tokens_reused_total",
+            "prompt tokens served from shared prefix pages")
+        self._m_spec_rounds = reg.counter(
+            "spec_rounds_total", "speculative draft/verify rounds")
+        self._m_spec_drafted = reg.counter(
+            "spec_drafted_total", "draft tokens proposed")
+        self._m_spec_accepted = reg.counter(
+            "spec_accepted_total", "draft tokens accepted by f32 verify")
+        self._m_spec_acc_rate = reg.gauge(
+            "spec_acceptance_rate", "cumulative accepted/drafted ratio")
+        self._m_retrace = reg.counter(
+            "retrace_total",
+            "jitted step-function (re)traces, by trace-time side effect",
+            labelnames=("step",))
+        self._m_finished = reg.counter(
+            "requests_finished_total", "requests finished",
+            labelnames=("reason",))
+        self._m_tokens = reg.counter(
+            "tokens_generated_total", "tokens committed to finished requests")
+        self._m_syncs = reg.counter(
+            "host_syncs_total", "device->host synchronizations",
+            labelnames=("kind",))
+        self._m_active = reg.gauge("active_slots", "slots bound to a request")
+        self._m_arb = reg.counter(
+            "arbiter_switches_total", "slot-arbiter rung switches",
+            labelnames=("arbiter", "cause"))
+        self._m_tick_s = reg.histogram(
+            "tick_seconds", "decode-tick phase wall time (s)",
+            labelnames=("phase",), buckets=tb)
+        self._m_prefill_s = reg.histogram(
+            "prefill_seconds", "admission prefill wall time (s)", buckets=tb)
+        self._m_req_latency = reg.histogram(
+            "request_latency_seconds", "admission->finish wall time (s)",
+            buckets=tb)
+
+    def _make_switch_hook(self, arbiter_name: str, rung_names):
+        """Observer for :attr:`SlotArbiter.on_switch`: promotes every
+        rung switch to ``arbiter_switches_total{arbiter,cause}`` plus a
+        trace instant on the slot's lane."""
+        def hook(step, slot, old_idx, new_idx, cause):
+            self._m_arb.inc(arbiter=arbiter_name, cause=cause)
+            if self.telemetry.on:
+                self.telemetry.instant(
+                    "arbiter-switch", tid=slot + 1, args={
+                        "arbiter": arbiter_name, "cause": cause,
+                        "from": rung_names[old_idx], "to": rung_names[new_idx],
+                        "step": step,
+                    })
+        return hook
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """The historical counting-hook dict, now a read-only view of
+        the registry (same keys/values as the pre-telemetry ad-hoc
+        ``stats`` attribute)."""
+        return {
+            "decode_steps": int(self._m_decode_ticks.value()),
+            "level_passes": int(self._m_level_passes.total()),
+            "prefills": int(self._m_prefills.value()),
+            "spec_rounds": int(self._m_spec_rounds.value()),
+            "spec_drafted": int(self._m_spec_drafted.value()),
+            "spec_accepted": int(self._m_spec_accepted.value()),
+            "prefill_chunks": int(self._m_prefill_chunks.value()),
+            "prefix_hits": int(self._m_prefix_hits.value()),
+            "prefix_tokens_reused": int(self._m_prefix_reused.value()),
+        }
+
+    @property
+    def _chunk_traces(self) -> int:
+        """Trace-time counter for the fixed-shape chunk-prefill step —
+        pinned by the zero-retrace test: after warmup it must not move,
+        whatever mix of prompt lengths is admitted.  Alias for
+        ``retrace_total{step="chunk"}``."""
+        return int(self._m_retrace.value(step="chunk"))
+
+    def metrics_snapshot(self) -> dict:
+        """Point-in-time nested dict of every metric (refreshes the
+        page-pool occupancy gauges first)."""
+        if self.paged:
+            self.cache_ops.scrape_gauges()
+        self._m_active.set(len(self.scheduler.active_slots()))
+        return self.telemetry.registry.snapshot()
+
+    def render_prometheus(self) -> str:
+        """Prometheus text exposition of :meth:`metrics_snapshot`."""
+        if self.paged:
+            self.cache_ops.scrape_gauges()
+        self._m_active.set(len(self.scheduler.active_slots()))
+        return self.telemetry.render_prometheus()
 
     # -- jitted step functions ---------------------------------------------
 
@@ -381,6 +512,9 @@ class ContinuousBatchingServer:
 
         def make_prefill(mode):
             def fn(params, tokens, caches):
+                # trace-time side effect: fires when jit (re)traces this
+                # body, never at run time — the retrace detector
+                self._m_retrace.inc(step="prefill")
                 return prefill_step(params, tokens, caches, cfg, mode=mode)
             return fn
 
@@ -390,6 +524,7 @@ class ContinuousBatchingServer:
             # exponents) is independent of the other slots' contents —
             # the slot-isolation contract (see models.decode_step).
             def fn(params, tok, pos, caches, lane_mask):
+                self._m_retrace.inc(step="decode")
                 return decode_step(
                     params, tok, pos, caches, cfg, mode=mode, lane_mask=lane_mask
                 )
@@ -446,6 +581,7 @@ class ContinuousBatchingServer:
             AND see a pristine cache view, so members compute exactly
             as if the other levels' slots were empty; cache rows and
             logits merge only where ``mask`` is set."""
+            self._m_retrace.inc(step="pool_pass")
             view = mask_cache_view(caches, mask)
             logits, new_caches = dec_disp(level_idx, params, tok, pos, view, mask)
             caches = merge_caches(caches, new_caches, mask)
@@ -510,6 +646,7 @@ class ContinuousBatchingServer:
             masked lanes are only EMPTY slots, whose cache rows the
             eviction reset already zeroed, so no pristine view is
             needed here."""
+            self._m_retrace.inc(step="tick")
             logits, new_caches = dec_disp(level_idx, params, tok[:, None], pos, caches, mask)
             caches = merge_caches(caches, new_caches, mask)
             new_tok, hv = finish(logits, key)
@@ -577,7 +714,8 @@ class ContinuousBatchingServer:
         # machinery as speculative verify).
         def make_chunk(mode):
             def fn(params, tokens, positions, view, keep_pos, keep_count):
-                self._chunk_traces += 1  # trace-time side effect (counting hook)
+                # trace-time side effect (the zero-retrace counting hook)
+                self._m_retrace.inc(step="chunk")
                 logits, after, aux = segment_step(
                     params, tokens, positions, view, cfg, mode=mode
                 )
@@ -614,6 +752,7 @@ class ContinuousBatchingServer:
             scatter the ONE row each active lane wrote.  Masked lanes
             are only empty slots here (zero tables -> pristine gather),
             mirroring the contiguous ``tick``."""
+            self._m_retrace.inc(step="tick")
             view = pool.device_view(state, tables)
             logits, new_view = dec_disp(
                 level_idx, params, tok[:, None], pos, view, mask
@@ -633,6 +772,7 @@ class ContinuousBatchingServer:
             the page pool, so the gathered view is pristine-masked (the
             isolation contract) before the pass; their rows are dropped
             at the scatter."""
+            self._m_retrace.inc(step="pool_pass")
             view = mask_cache_view(pool.device_view(state, tables), mask)
             logits, new_view = dec_disp(level_idx, params, tok, pos, view, mask)
             state = pool.commit_rows(state, tables, new_view, pos, mask)
@@ -679,6 +819,8 @@ class ContinuousBatchingServer:
         """Prefill the request at its own level and scatter its caches
         into the pool slot.  No host pull unless EOS checking needs the
         first token's value."""
+        tel = self.telemetry
+        plen = len(req.prompt)
         if req.speculative:
             # the exactness anchor: a speculative request's prefill and
             # (verify) decode both run the f32/"exact" rung; the
@@ -688,18 +830,33 @@ class ContinuousBatchingServer:
         else:
             li = self._level_idx(req)
         self.arbiter.reset_slot(slot, li)
-        plen = len(req.prompt)
-        if self.paged:
-            logits = self._prefill_chunked(slot, req.prompt, li)
-        else:
-            logits, single = self._prefill(
-                jnp.int32(li), self.params, jnp.asarray([req.prompt], jnp.int32),
-                self._single_template,
-            )
-            self.pool = self._write(self.pool, single, slot)
-        self.stats["prefills"] += 1
-        self._key, sub = jax.random.split(self._key)
-        tok, hv = self._finish(logits, sub)
+        t0 = 0.0
+        if tel.on:
+            t0 = time.perf_counter()
+            self._req_t0[slot] = t0
+            tel.async_begin("request", id=req.rid, tid=slot + 1, args={
+                "rid": req.rid, "prompt_len": plen,
+                "level": self.level_names[li], "speculative": req.speculative,
+            })
+        with tel.span("admit", tid=slot + 1,
+                      args={"rid": req.rid, "prompt_len": plen}
+                      if tel.on else None):
+            if self.paged:
+                logits = self._prefill_chunked(slot, req.prompt, li)
+            else:
+                logits, single = self._prefill(
+                    jnp.int32(li), self.params,
+                    jnp.asarray([req.prompt], jnp.int32),
+                    self._single_template,
+                )
+                self.pool = self._write(self.pool, single, slot)
+            self._m_prefills.inc()
+            self._key, sub = jax.random.split(self._key)
+            tok, hv = self._finish(logits, sub)
+            if tel.on and self.scfg.telemetry.sync_device:
+                hv = jax.block_until_ready(hv)
+        if tel.on:
+            self._m_prefill_s.observe(time.perf_counter() - t0)
         self._tok = self._tok.at[slot].set(tok[0])
         self._pos = self._pos.at[slot].set(plen)
         self._gen_buf = self._gen_buf.at[slot, 0].set(tok[0])
@@ -709,7 +866,9 @@ class ContinuousBatchingServer:
         )
         eos_seen = False
         if self.scfg.eos_id is not None:
+            self._m_syncs.inc(kind="eos")
             eos_seen = int(np.asarray(hv)[0, 0]) == self.scfg.eos_id
+        self._m_active.set(len(self.scheduler.active_slots()))
         reason = self.scheduler.advance(slot, eos=eos_seen)
         if reason is not None:
             self._finish_slot(slot, reason)
@@ -725,8 +884,8 @@ class ContinuousBatchingServer:
         pool: PagedCachePool = self.cache_ops
         self.pool, matched, chain = pool.prepare_admission(self.pool, slot, prompt)
         if matched:
-            self.stats["prefix_hits"] += 1
-            self.stats["prefix_tokens_reused"] += matched
+            self._m_prefix_hits.inc()
+            self._m_prefix_reused.inc(matched)
         C = self.scfg.resolved_chunk
         plen = len(prompt)
         li_dev = jnp.int32(li)
@@ -737,18 +896,21 @@ class ContinuousBatchingServer:
         scatter_ids = pool.scatter_ids(slot)
         last = None
         start = matched
+        tel = self.telemetry
         while start < plen:
             r = min(C, plen - start)
             toks = np.zeros((1, C), np.int32)
             toks[0, :r] = prompt[start : start + r]
             positions = start + np.arange(C, dtype=np.int32)[None]
-            last, self.pool = self._chunk_admit(
-                li_dev, self.params, jnp.asarray(toks), jnp.asarray(positions),
-                self.pool, slot_tables, scatter_ids, slot_dev,
-                jnp.asarray([start + r - 1], jnp.int32),
-                jnp.asarray([r], jnp.int32),
-            )
-            self.stats["prefill_chunks"] += 1
+            with tel.span("prefill-chunk", tid=slot + 1,
+                          args={"start": start, "rows": r} if tel.on else None):
+                last, self.pool = self._chunk_admit(
+                    li_dev, self.params, jnp.asarray(toks), jnp.asarray(positions),
+                    self.pool, slot_tables, scatter_ids, slot_dev,
+                    jnp.asarray([start + r - 1], jnp.int32),
+                    jnp.asarray([r], jnp.int32),
+                )
+            self._m_prefill_chunks.inc()
             start += r
         # matched <= plen - 1 by construction (the block holding the
         # first decode write is never attached shared), so at least one
@@ -763,8 +925,17 @@ class ContinuousBatchingServer:
         finished, and reset the slot: zero cache rows (pos sentinel
         back to -1) so no KV/SSM state leaks into the next occupant."""
         n = self.scheduler.n_generated(slot)
+        self._m_syncs.inc(kind="evict")
         toks = np.asarray(self._gen_buf[slot, :n]).tolist()
         fin = self.scheduler.finish(slot, toks, reason)
+        self._m_finished.inc(reason=reason)
+        self._m_tokens.inc(n)
+        if self.telemetry.on:
+            t0 = self._req_t0.pop(slot, None)
+            if t0 is not None:
+                self._m_req_latency.observe(time.perf_counter() - t0)
+            self.telemetry.async_end("request", id=fin.rid, tid=slot + 1,
+                                     args={"reason": reason, "n_generated": n})
         if self.paged:
             # release the slot's page references (shared pages survive in
             # the prefix cache) and zero its cumulative SSM lanes; page
@@ -775,6 +946,7 @@ class ContinuousBatchingServer:
         self._tok = self._tok.at[slot].set(0)
         self._pos = self._pos.at[slot].set(0)
         self._gen_count = self._gen_count.at[slot].set(0)
+        self._m_active.set(len(self.scheduler.active_slots()))
         return fin
 
     # -- speculative round --------------------------------------------------
@@ -790,37 +962,44 @@ class ContinuousBatchingServer:
         is (B, k+2) ints — commit counts + committed token values (the
         EOS/bookkeeping pull, the speculative analogue of the vanilla
         per-step (B, 3) pull)."""
+        tel = self.telemetry
+        tel_on = tel.on
         rungs = self.draft_arbiter.idx
         present = sorted(set(int(v) for v in rungs[spec_now]))
         tables = self.cache_ops.device_tables() if self.paged else None
         drafts = None
-        for ri in present:
-            dmask = jnp.asarray(spec_now & (rungs == ri))
+        with tel.span("draft", args={"rungs": len(present)} if tel_on else None):
+            for ri in present:
+                dmask = jnp.asarray(spec_now & (rungs == ri))
+                if self.paged:
+                    part = self._spec_draft_p(
+                        jnp.int32(ri), self.params, self._tok, self._pos,
+                        self.pool, tables, dmask,
+                    )
+                else:
+                    part = self._spec_draft(
+                        jnp.int32(ri), self.params, self._tok, self._pos, self.pool, dmask
+                    )
+                drafts = part if drafts is None else jnp.where(dmask[:, None], part, drafts)
+        mask_dev = jnp.asarray(spec_now)
+        with tel.span("verify", args={"k": k} if tel_on else None):
             if self.paged:
-                part = self._spec_draft_p(
-                    jnp.int32(ri), self.params, self._tok, self._pos,
-                    self.pool, tables, dmask,
+                (preds, n_commit, self.pool, self._tok, self._pos,
+                 finite, amp) = self._spec_verify_p(
+                    self.params, self._tok, self._pos, drafts, self.pool,
+                    tables, mask_dev,
                 )
             else:
-                part = self._spec_draft(
-                    jnp.int32(ri), self.params, self._tok, self._pos, self.pool, dmask
+                (preds, n_commit, self.pool, self._tok, self._pos,
+                 finite, amp) = self._spec_verify(
+                    self.params, self._tok, self._pos, drafts, self.pool, mask_dev
                 )
-            drafts = part if drafts is None else jnp.where(dmask[:, None], part, drafts)
-        mask_dev = jnp.asarray(spec_now)
-        if self.paged:
-            (preds, n_commit, self.pool, self._tok, self._pos,
-             finite, amp) = self._spec_verify_p(
-                self.params, self._tok, self._pos, drafts, self.pool,
-                tables, mask_dev,
+            self._gen_buf, self._gen_count = self._spec_update(
+                self._gen_buf, self._gen_count, preds, n_commit, mask_dev
             )
-        else:
-            (preds, n_commit, self.pool, self._tok, self._pos,
-             finite, amp) = self._spec_verify(
-                self.params, self._tok, self._pos, drafts, self.pool, mask_dev
-            )
-        self._gen_buf, self._gen_count = self._spec_update(
-            self._gen_buf, self._gen_count, preds, n_commit, mask_dev
-        )
+        # the per-round bookkeeping pull: commit counts + token values
+        # (one logical sync, whatever mode)
+        self._m_syncs.inc(kind="spec")
         n_h = np.asarray(n_commit)
         preds_h = np.asarray(preds)
         accepted = np.maximum(n_h - 1, 0)
@@ -829,9 +1008,13 @@ class ContinuousBatchingServer:
             self._step, nonfinite=~np.asarray(finite), amplitude=np.asarray(amp),
             active=spec_now, acceptance=acc,
         )
-        self.stats["spec_rounds"] += 1
-        self.stats["spec_drafted"] += int(k * spec_now.sum())
-        self.stats["spec_accepted"] += int(accepted[spec_now].sum())
+        self._m_spec_rounds.inc()
+        self._m_spec_drafted.inc(int(k * spec_now.sum()))
+        self._m_spec_accepted.inc(int(accepted[spec_now].sum()))
+        if self._m_spec_drafted.value():
+            self._m_spec_acc_rate.set(
+                self._m_spec_accepted.value() / self._m_spec_drafted.value()
+            )
         eos_id = self.scfg.eos_id
         for slot in np.nonzero(spec_now)[0]:
             for j in range(int(n_h[slot])):
@@ -927,80 +1110,111 @@ class ContinuousBatchingServer:
                     )
 
             if spec_now.any():
-                self._spec_round(spec_now, k)
+                with self.telemetry.span(
+                        "spec-round",
+                        args={"step": self._step, "lanes": int(spec_now.sum())}
+                        if self.telemetry.on else None):
+                    self._spec_round(spec_now, k)
 
             if van_now.any():
-                levels = self.arbiter.idx
-                present = sorted(set(int(v) for v in levels[van_now]))
-                self._key, sub = jax.random.split(self._key)
-                tables = self.cache_ops.device_tables() if self.paged else None
-                if len(present) == 1:
-                    # hot path: homogeneous level -> ONE fused dispatch
-                    key = (van_now.tobytes(), present[0])
-                    if key != mask_key:
-                        mask_key, mask_dev = key, jnp.asarray(van_now)
-                    if self.paged:
-                        (self.pool, self._gen_buf, self._gen_count, self._tok,
-                         self._pos, self._health, hv) = self._tick_p(
-                            jnp.int32(present[0]), self.params, self._tok,
-                            self._pos, self.pool, tables, mask_dev, sub,
-                            self._gen_buf, self._gen_count, self._health,
-                        )
+                tel = self.telemetry
+                tel_on = tel.on
+                t0 = time.perf_counter() if tel_on else 0.0
+                with tel.span("decode-tick",
+                              args={"step": self._step,
+                                    "lanes": int(van_now.sum())}
+                              if tel_on else None):
+                    levels = self.arbiter.idx
+                    present = sorted(set(int(v) for v in levels[van_now]))
+                    self._key, sub = jax.random.split(self._key)
+                    tables = self.cache_ops.device_tables() if self.paged else None
+                    t1 = time.perf_counter() if tel_on else 0.0
+                    if len(present) == 1:
+                        # hot path: homogeneous level -> ONE fused dispatch
+                        key = (van_now.tobytes(), present[0])
+                        if key != mask_key:
+                            mask_key, mask_dev = key, jnp.asarray(van_now)
+                        lv = self.level_names[present[0]]
+                        with tel.span("level-pass",
+                                      args={"level": lv} if tel_on else None):
+                            if self.paged:
+                                (self.pool, self._gen_buf, self._gen_count, self._tok,
+                                 self._pos, self._health, hv) = self._tick_p(
+                                    jnp.int32(present[0]), self.params, self._tok,
+                                    self._pos, self.pool, tables, mask_dev, sub,
+                                    self._gen_buf, self._gen_count, self._health,
+                                )
+                            else:
+                                (self.pool, self._gen_buf, self._gen_count, self._tok,
+                                 self._pos, self._health, hv) = self._tick(
+                                    jnp.int32(present[0]), self.params, self._tok, self._pos,
+                                    self.pool, mask_dev, sub,
+                                    self._gen_buf, self._gen_count, self._health,
+                                )
+                        self._m_level_passes.inc(level=lv)
                     else:
-                        (self.pool, self._gen_buf, self._gen_count, self._tok,
-                         self._pos, self._health, hv) = self._tick(
-                            jnp.int32(present[0]), self.params, self._tok, self._pos,
-                            self.pool, mask_dev, sub,
-                            self._gen_buf, self._gen_count, self._health,
+                        # mixed levels: one pool pass per level, mask-merged
+                        logits = self._zero_logits
+                        for li in present:
+                            mask = jnp.asarray(van_now & (levels == li))
+                            lv = self.level_names[li]
+                            with tel.span("level-pass",
+                                          args={"level": lv} if tel_on else None):
+                                if self.paged:
+                                    logits, self.pool = self._pool_pass_p(
+                                        jnp.int32(li), self.params, self._tok[:, None],
+                                        self._pos, self.pool, tables, mask, logits,
+                                    )
+                                else:
+                                    logits, self.pool = self._pool_pass(
+                                        jnp.int32(li), self.params, self._tok[:, None], self._pos,
+                                        self.pool, mask, logits,
+                                    )
+                            self._m_level_passes.inc(level=lv)
+                        tok, hv = self._finish(logits, sub)
+                        active_dev = jnp.asarray(van_now)
+                        (self._gen_buf, self._gen_count, self._tok, self._pos,
+                         self._health) = self._step_update(
+                            self._gen_buf, self._gen_count, self._tok, self._pos,
+                            self._health, tok, hv, active_dev,
                         )
-                    self.stats["level_passes"] += 1
-                else:
-                    # mixed levels: one pool pass per level, mask-merged
-                    logits = self._zero_logits
-                    for li in present:
-                        mask = jnp.asarray(van_now & (levels == li))
-                        if self.paged:
-                            logits, self.pool = self._pool_pass_p(
-                                jnp.int32(li), self.params, self._tok[:, None],
-                                self._pos, self.pool, tables, mask, logits,
-                            )
-                        else:
-                            logits, self.pool = self._pool_pass(
-                                jnp.int32(li), self.params, self._tok[:, None], self._pos,
-                                self.pool, mask, logits,
-                            )
-                        self.stats["level_passes"] += 1
-                    tok, hv = self._finish(logits, sub)
-                    active_dev = jnp.asarray(van_now)
-                    (self._gen_buf, self._gen_count, self._tok, self._pos,
-                     self._health) = self._step_update(
-                        self._gen_buf, self._gen_count, self._tok, self._pos,
-                        self._health, tok, hv, active_dev,
-                    )
-                self.stats["decode_steps"] += 1
-            self._step += 1
+                    self._m_decode_ticks.inc()
+                    if tel_on and self.scfg.telemetry.sync_device:
+                        # profiling mode ONLY: barrier so device_dispatch
+                        # measures device time, not async dispatch time
+                        hv = jax.block_until_ready(hv)
+                    t2 = time.perf_counter() if tel_on else 0.0
+                    self._step += 1
 
-            if van_now.any():
-                eos_flags = np.zeros((self.scfg.n_slots,), bool)
-                if eos_mode:
-                    hv_host = np.asarray(hv)  # the per-step EOS pull
-                    eos_flags = hv_host[:, 0].astype(np.int32) == self.scfg.eos_id
-                    self.arbiter.observe(
-                        self._step, nonfinite=hv_host[:, 1] < 0.5,
-                        amplitude=hv_host[:, 2], active=van_now,
-                    )
-                elif self._step % self.scfg.health_sync_every == 0:
-                    h = np.asarray(self._health)  # periodic aggregated sync
-                    self.arbiter.observe(
-                        self._step, nonfinite=h[:, 0] < 0.5, amplitude=h[:, 1],
-                        active=van_now,
-                    )
-                    self._health = self._health_neutral.copy()  # template stays valid under donation
+                    eos_flags = np.zeros((self.scfg.n_slots,), bool)
+                    if eos_mode:
+                        self._m_syncs.inc(kind="eos")
+                        hv_host = np.asarray(hv)  # the per-step EOS pull
+                        eos_flags = hv_host[:, 0].astype(np.int32) == self.scfg.eos_id
+                        self.arbiter.observe(
+                            self._step, nonfinite=hv_host[:, 1] < 0.5,
+                            amplitude=hv_host[:, 2], active=van_now,
+                        )
+                    elif self._step % self.scfg.health_sync_every == 0:
+                        self._m_syncs.inc(kind="health")
+                        h = np.asarray(self._health)  # periodic aggregated sync
+                        self.arbiter.observe(
+                            self._step, nonfinite=h[:, 0] < 0.5, amplitude=h[:, 1],
+                            active=van_now,
+                        )
+                        self._health = self._health_neutral.copy()  # template stays valid under donation
 
-                for slot in np.nonzero(van_now)[0]:
-                    reason = self.scheduler.advance(int(slot), eos=bool(eos_flags[slot]))
-                    if reason is not None:
-                        self._finish_slot(int(slot), reason)
+                    for slot in np.nonzero(van_now)[0]:
+                        reason = self.scheduler.advance(int(slot), eos=bool(eos_flags[slot]))
+                        if reason is not None:
+                            self._finish_slot(int(slot), reason)
+                if tel_on:
+                    t3 = time.perf_counter()
+                    self._m_tick_s.observe(t1 - t0, phase="host_schedule")
+                    self._m_tick_s.observe(t2 - t1, phase="device_dispatch")
+                    self._m_tick_s.observe(t3 - t2, phase="sync")
+            else:
+                self._step += 1
 
         # hand results out AND release them from the scheduler: a
         # server outlives its serve() calls, so retaining per-request
